@@ -1,0 +1,28 @@
+"""Paper Fig 3: computing efficiency (GOPS/s/W) — STAR vs GPU / PipeLayer /
+ReTransformer, from the component hardware model."""
+
+from repro.hwmodel.star_engine import fig3, system_efficiency
+
+
+def main():
+    f = fig3()
+    print(f"fig3_star_gops_w,{f['star_model']:.1f},paper=612.66")
+    print(f"fig3_retransformer_gops_w,{f['retransformer_model']:.1f},paper=467.7")
+    print(f"fig3_star_vs_retransformer,{f['star_vs_retransformer_model']:.3f},paper=1.31")
+    print(f"fig3_star_vs_gpu,{f['star_model']/f['gpu_paper']:.1f},paper=30.63")
+    print(f"fig3_star_vs_pipelayer,{f['star_model']/f['pipelayer_paper']:.2f},paper=4.32")
+    # ablation: pipeline alone / rram-softmax alone
+    base = system_efficiency(128, softmax_on_rram=False, vector_pipeline=False)
+    sm_only = system_efficiency(128, softmax_on_rram=True, vector_pipeline=False)
+    pipe_only = system_efficiency(128, softmax_on_rram=False, vector_pipeline=True)
+    print(f"fig3_ablation_base,{base['gops_per_w']:.1f},")
+    print(f"fig3_ablation_rram_softmax_only,{sm_only['gops_per_w']:.1f},")
+    print(f"fig3_ablation_pipeline_only,{pipe_only['gops_per_w']:.1f},")
+    assert abs(f["star_model"] - 612.66) / 612.66 < 0.25
+    assert abs(f["retransformer_model"] - 467.7) / 467.7 < 0.25
+    assert 1.0 < f["star_vs_retransformer_model"] < 1.7
+    return f
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel micro-bench: interpret-mode timings (CPU correctness harness) +
+the roofline-relevant op accounting for the STAR kernels.
+
+Wall-times here are CPU-interpret numbers (NOT TPU performance); the derived
+column reports the kernel's arithmetic-intensity bookkeeping used by §Perf.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import DEFAULT_FORMAT
+from repro.kernels.flash_star.ops import flash_star_op
+from repro.kernels.star_softmax.ops import star_softmax_op
+from repro.kernels.crossbar_matmul.ops import crossbar_matmul_op
+
+
+def _t(f, iters=3):
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 512)) * 4, jnp.float32)
+    us = _t(lambda: star_softmax_op(x, DEFAULT_FORMAT))
+    # STAR op accounting: per element 1 quant + 1 LUT; per row 1 VMM(256) + 1 div
+    ops = x.size * 2 + x.shape[0] * (DEFAULT_FORMAT.num_levels * 2 + 1)
+    print(f"star_softmax_64x512,{us:.0f},engine_ops={ops}")
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    us = _t(lambda: flash_star_op(q, k, v, causal=True, block_q=64, block_k=64), iters=2)
+    flops = 4 * 256 * 256 * 4 * 64  # QK^T + PV
+    print(f"flash_star_256,{us:.0f},attn_flops={flops}")
+    us8 = _t(lambda: flash_star_op(q, k, v, causal=True, pv_int8=True,
+                                   block_q=64, block_k=64), iters=2)
+    print(f"flash_star_256_int8pv,{us8:.0f},pv_bytes_saved=0.5x")
+
+    from repro.kernels.ssd_scan.ops import ssd_scan_op
+    xdt = jnp.asarray(rng.normal(size=(1, 256, 8, 32)), jnp.float32)
+    ad = -jnp.abs(jnp.asarray(rng.normal(size=(1, 256, 8)) * 0.1, jnp.float32))
+    bm = jnp.asarray(rng.normal(size=(1, 256, 32)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(1, 256, 32)) * 0.3, jnp.float32)
+    us = _t(lambda: ssd_scan_op(xdt, ad, bm, cm, chunk=64)[0], iters=2)
+    print(f"ssd_scan_256,{us:.0f},vmem_state_bytes={8*32*32*4}")
+
+    a = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 256)) * 0.05, jnp.float32)
+    us = _t(lambda: crossbar_matmul_op(a, w))
+    print(f"crossbar_matmul_64x256x256,{us:.0f},xbar_reads={(256//128)*(256//128)}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

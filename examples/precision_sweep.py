@@ -1,0 +1,51 @@
+"""The paper's precision trade-off, interactively: sweep softmax bitwidths
+on a trained model and print the accuracy/error landscape + a calibration
+suggestion for your own logits (repro.core.precision.calibrate_format).
+
+    PYTHONPATH=src python examples/precision_sweep.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.accuracy_bitwidth import evaluate, gen_data, train
+from repro.core.attention import SoftmaxConfig
+from repro.core.fixedpoint import FixedPointFormat
+from repro.core.precision import calibrate_format
+from repro.core.star_softmax import exact_softmax, star_softmax
+
+
+def main():
+    print("training the induction-retrieval classifier (exact softmax)...")
+    params = train(steps=300)
+
+    print(f"{'format':>12s} {'accuracy':>9s} {'softmax err':>12s}")
+    rng = np.random.default_rng(0)
+    probe = jnp.asarray(rng.normal(size=(64, 128)) * 5, jnp.float32)
+    for name, fmt in [
+        ("exact", None),
+        ("9b (6i.3f)", FixedPointFormat(6, 3)),
+        ("8b (6i.2f)", FixedPointFormat(6, 2)),
+        ("7b (5i.2f)", FixedPointFormat(5, 2)),
+        ("5b (4i.1f)", FixedPointFormat(4, 1)),
+        ("3b (2i.1f)", FixedPointFormat(2, 1)),
+        ("2b (1i.1f)", FixedPointFormat(1, 1)),
+    ]:
+        if fmt is None:
+            acc = evaluate(params, SoftmaxConfig(kind="exact"))
+            err = 0.0
+        else:
+            acc = evaluate(params, SoftmaxConfig(kind="star", fmt=fmt))
+            err = float(jnp.max(jnp.abs(
+                star_softmax(probe, fmt) - exact_softmax(probe))))
+        print(f"{name:>12s} {acc*100:8.1f}% {err:12.4f}")
+
+    # calibration on observed logits (the paper's per-dataset procedure)
+    z = probe - jnp.max(probe, axis=-1, keepdims=True)
+    fmt = calibrate_format(np.asarray(z))
+    print(f"\ncalibrate_format on these logits -> {fmt.short_name()} "
+          f"(paper's CNEWS/MRPC/CoLA formats were derived this way)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Batched serving with the STAR engine: prefill -> decode -> sampled tokens,
+on any of the 10 assigned architectures (reduced configs).
+
+    PYTHONPATH=src python examples/serve_star.py --arch recurrentgemma_2b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models.param import materialize
+from repro.models.registry import build_model
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = materialize(model.param_specs(), jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg, params,
+        ServeConfig(max_len=args.prompt_len + args.gen + cfg.num_patches + 8,
+                    temperature=args.temperature, star_sampling=True),
+    )
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.num_patches, cfg.frontend_dim)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        kw["src_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, 48, cfg.frontend_dim)), jnp.float32)
+
+    t0 = time.perf_counter()
+    toks, info = eng.generate(prompts, args.gen, key=jax.random.PRNGKey(1), **kw)
+    dt = time.perf_counter() - t0
+    print(f"{args.arch} [{cfg.family}]: generated {toks.shape[0]}x{toks.shape[1]} "
+          f"tokens in {dt:.2f}s  (STAR sampling, "
+          f"{cfg.softmax_format.short_name()} codebook)")
+    for row in np.asarray(toks):
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture configs (assigned pool + the paper's own BERT-base proxy).
+
+Each module exposes ``config()`` (the exact assigned spec) and
+``smoke_config()`` (a reduced same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig  # noqa: F401
+
+ARCH_IDS: List[str] = [
+    "granite_moe_1b_a400m",
+    "mixtral_8x22b",
+    "granite_8b",
+    "qwen2_72b",
+    "deepseek_coder_33b",
+    "llama3_405b",
+    "qwen2_vl_7b",
+    "mamba2_130m",
+    "seamless_m4t_large_v2",
+    "recurrentgemma_2b",
+]
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md §5)
+LONG_CONTEXT_ARCHS = {"mixtral_8x22b", "mamba2_130m", "recurrentgemma_2b"}
+
+
+def _mod(arch: str):
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch.replace("-", "_")).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch.replace("-", "_")).smoke_config()
+
+
+def shapes_for(arch: str) -> List[str]:
+    arch = arch.replace("-", "_")
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        out.append("long_500k")
+    return out
+
+
+def all_cells() -> List[tuple]:
+    """Every runnable (arch, shape) dry-run cell."""
+    return [(a, s) for a in ARCH_IDS for s in shapes_for(a)]

@@ -1,0 +1,136 @@
+"""Model / run configuration dataclasses shared by all architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.attention import SoftmaxConfig
+from repro.core.fixedpoint import FixedPointFormat
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    mlp_type: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+
+    # --- the paper's technique ---
+    softmax_kind: str = "star"  # star | star_ste | exact
+    softmax_int_bits: int = 6
+    softmax_frac_bits: int = 2
+    softmax_mode: str = "gather"  # gather | onehot | histogram
+    star_router: bool = True  # STAR softmax on the MoE router too
+    attn_impl: str = "blocked"  # blocked | naive | flash
+    attn_block_size: int = 512
+    # decode KV-cache write: "dus" (dynamic_update_slice) or "onehot"
+    # (masked blend).  With the cache seq dim sharded for SP decode, a
+    # dynamic update at a traced index makes XLA reshard the whole cache
+    # (collective-permute storm); the one-hot blend is elementwise and
+    # stays local — the §Perf decode hillclimb lever.
+    kv_update: str = "dus"
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_style: str = "tp"  # tp (expert weights column-parallel) | ep (expert-parallel)
+
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_ngroups: int = 1
+
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("recurrent", "recurrent", "attention")
+    lru_width: Optional[int] = None
+    local_window: int = 2048
+    conv_width: int = 4
+
+    # --- enc-dec (seamless) ---
+    num_decoder_layers: int = 0
+    frontend_dim: Optional[int] = None  # stub frame/patch embedding dim
+
+    # --- vlm ---
+    num_patches: int = 0  # stub patch positions prepended
+    mrope_sections: Tuple[int, ...] = ()  # M-RoPE split of head_dim
+
+    # --- numerics / training ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    # Megatron-style sequence parallelism on the inter-block activations:
+    # the remat-saved layer carries shard their seq dim over the model axis
+    # (mandatory for the >=30B configs — 126 saved carries of a 405B model
+    # do not fit HBM replicated)
+    seq_parallel_activations: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding table size: vocab padded to a multiple of
+        512 so the vocab dim always shards on the model axis (a 50280-size
+        table would silently replicate 13 GB/dev of logits otherwise).
+        Padded logit columns are masked to -inf in ``unembed``."""
+        return -(-self.vocab_size // 512) * 512
+
+    @property
+    def softmax_format(self) -> FixedPointFormat:
+        return FixedPointFormat(self.softmax_int_bits, self.softmax_frac_bits)
+
+    @property
+    def softmax_config(self) -> SoftmaxConfig:
+        if self.softmax_kind == "exact":
+            return SoftmaxConfig(kind="exact")
+        return SoftmaxConfig(
+            kind=self.softmax_kind, fmt=self.softmax_format, mode=self.softmax_mode
+        )
+
+    def validate(self) -> "ModelConfig":
+        assert self.num_heads % self.num_kv_heads == 0, "GQA divisibility"
+        if self.family == "moe":
+            assert self.num_experts > 0 and self.top_k > 0
+        if self.family == "ssm":
+            assert self.ssm_state > 0
+        if self.family == "hybrid":
+            assert self.block_pattern
+        if self.family == "encdec":
+            assert self.num_decoder_layers > 0
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

@@ -1,0 +1,41 @@
+"""The paper's own evaluation model: BERT-base (12L, d=768, 12H, ff=3072).
+
+The paper profiles softmax latency and accuracy on BERT-base over CNEWS /
+MRPC / CoLA.  We carry it as a causal-LM-shaped config for the framework
+plus a bidirectional encoder classifier built from the same layers inside
+``benchmarks/accuracy_bitwidth.py`` (the paper's accuracy protocol)."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="bert-base-star",
+        family="dense",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=30522,
+        mlp_type="gelu",
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="bert-base-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        mlp_type="gelu",
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+    )

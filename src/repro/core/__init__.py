@@ -1,0 +1,36 @@
+# The paper's primary contribution: the STAR softmax engine and the
+# vector-grained attention pipeline, as composable JAX modules.
+from repro.core.fixedpoint import (  # noqa: F401
+    DEFAULT_FORMAT,
+    FORMAT_CNEWS,
+    FORMAT_COLA,
+    FORMAT_MRPC,
+    FixedPointFormat,
+    dequantize,
+    quantize_index,
+    quantize_value,
+    quantize_value_ste,
+)
+from repro.core.lut import (  # noqa: F401
+    exp_lut,
+    exp_lut_int,
+    histogram_counts,
+    histogram_dot,
+    int_lut_scale,
+    lookup_gather,
+    lookup_onehot,
+)
+from repro.core.star_softmax import (  # noqa: F401
+    exact_softmax,
+    quantization_error,
+    star_softmax,
+    star_softmax_ste,
+)
+from repro.core.attention import (  # noqa: F401
+    EXACT_SOFTMAX,
+    STAR_SOFTMAX,
+    SoftmaxConfig,
+    attention,
+    blocked_attention,
+)
+from repro.core.precision import calibrate_format, policy_for  # noqa: F401

@@ -1,0 +1,245 @@
+"""Attention with a pluggable softmax engine + the vector-grained pipeline.
+
+Two execution paths, numerically cross-validated:
+
+* :func:`attention` — materializes the score matrix (the classic layout the
+  paper's *baseline* accelerators use: whole-operand granularity).
+* :func:`blocked_attention` — the **vector-grained pipeline** (paper §II
+  last ¶) as a ``lax.scan`` over KV blocks with online rescaling.  Softmax
+  runs per score *vector block* interleaved with QKᵀ and P·V, never
+  materializing the [Tq, Tk] matrix.  The Pallas kernel
+  (``repro.kernels.flash_star``) implements the same schedule with explicit
+  VMEM tiling; this is its lowering-independent reference.
+
+STAR arithmetic stays closed under the online form: the running rescale
+factor ``exp(m_old - m_new)`` has a nonpositive quantizable exponent, so it
+is itself a LUT entry.
+
+Shapes (TPU-native layout): q ``[B, Tq, Hq, D]``, k/v ``[B, Tk, Hkv, D]``,
+``Hq % Hkv == 0`` (GQA; MQA when Hkv == 1).  Output ``[B, Tq, Hq, D]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core.fixedpoint import (
+    DEFAULT_FORMAT,
+    GRID_SENTINEL,
+    FixedPointFormat,
+    grid_index,
+    quantize_logits,
+)
+from repro.core.star_softmax import exact_softmax, star_softmax, star_softmax_ste
+
+NEG_INF = -1e30  # finite mask value: keeps CAM index math NaN-free
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxConfig:
+    """Which softmax engine attention uses.
+
+    kind: "exact" (FP oracle), "star" (quantized LUT), "star_ste"
+    (quantized forward, straight-through backward — QAT).
+    """
+
+    kind: str = "star"
+    fmt: FixedPointFormat = DEFAULT_FORMAT
+    mode: str = "gather"  # star lowering: gather | onehot | histogram
+
+    def __post_init__(self):
+        if self.kind not in ("exact", "star", "star_ste"):
+            raise ValueError(f"unknown softmax kind {self.kind!r}")
+
+    def apply(self, scores: jax.Array, where: Optional[jax.Array] = None) -> jax.Array:
+        if self.kind == "exact":
+            if where is not None:
+                scores = jnp.where(where, scores, NEG_INF)
+            return exact_softmax(scores, axis=-1)
+        if self.kind == "star_ste":
+            if where is not None:
+                scores = jnp.where(where, scores, NEG_INF)
+            # NEG_INF scores quantize to the deepest LUT row (prob ~ 0).
+            return star_softmax_ste(scores, self.fmt, -1, self.mode)
+        return star_softmax(scores, self.fmt, axis=-1, mode=self.mode, where=where)
+
+
+EXACT_SOFTMAX = SoftmaxConfig(kind="exact")
+STAR_SOFTMAX = SoftmaxConfig(kind="star")
+
+
+def _build_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool,
+    sliding_window: Optional[int],
+    q_offset: int | jax.Array = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> Optional[jax.Array]:
+    """Boolean [*, Tq, Tk] mask; True = attend.
+
+    ``q_offset``: absolute position of q row 0 (decode: cache length).
+    ``kv_valid_len``: per-batch valid KV prefix (ragged batches), [B].
+    """
+    rows = jnp.arange(q_len)[:, None] + q_offset  # absolute q positions
+    cols = jnp.arange(kv_len)[None, :]
+    mask = None
+    if causal:
+        mask = cols <= rows
+    if sliding_window is not None:
+        w = cols > rows - sliding_window
+        mask = w if mask is None else (mask & w)
+    if kv_valid_len is not None:
+        valid = cols[None] < kv_valid_len[:, None, None]  # [B, 1, Tk]
+        mask = valid if mask is None else (mask[None] & valid)
+    return mask
+
+
+def _group_heads(q: jax.Array, hkv: int) -> jax.Array:
+    """[B, T, Hq, D] -> [B, T, Hkv, G, D]."""
+    b, t, hq, d = q.shape
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    return q.reshape(b, t, hkv, hq // hkv, d)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    softmax: SoftmaxConfig = STAR_SOFTMAX,
+    causal: bool = False,
+    sliding_window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Whole-operand attention (scores materialized)."""
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    scale = (d ** -0.5) if scale is None else scale
+
+    qg = _group_heads(q, hkv)  # [B, Tq, Hkv, G, D]
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # [B, Hkv, G, Tq, Tk]
+
+    mask = _build_mask(
+        tq, tk, causal=causal, sliding_window=sliding_window,
+        q_offset=q_offset, kv_valid_len=kv_valid_len,
+    )
+    where = None
+    if mask is not None:
+        # broadcast mask to [B, 1, 1, Tq, Tk]
+        where = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    probs = softmax.apply(scores, where=where)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(probs.dtype))
+    return out.reshape(b, tq, hq, d).astype(q.dtype)
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    softmax: SoftmaxConfig = STAR_SOFTMAX,
+    causal: bool = False,
+    sliding_window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    block_size: int = 512,
+    rescale: str = "float",
+) -> jax.Array:
+    """Vector-grained pipeline: online blocked attention (lax.scan over KV).
+
+    Per KV block: QKᵀ → STAR (or exact) softmax numerators → P·V, with
+    running (max, denominator, accumulator) carried across blocks.
+
+    ``rescale``: how the running factor ``exp(m_old - m_new)`` is computed
+    under STAR arithmetic — ``"lut"`` keeps it a codebook entry (fully
+    in-engine, compounds quantization error across blocks), ``"float"``
+    computes the one scalar per row-block in FP (default; matches the
+    paper's two-pass global-max semantics much more closely since the
+    paper finds the global max *before* any LUT lookup).
+    """
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    scale = (d ** -0.5) if scale is None else scale
+    star = softmax.kind in ("star", "star_ste")
+    fmt = softmax.fmt
+    table = lut_lib.exp_lut(fmt, dtype=jnp.float32) if star else None
+
+    nblk = -(-tk // block_size)
+    pad = nblk * block_size - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block_size, hkv, d)
+    vb = v.reshape(b, nblk, block_size, hkv, d)
+
+    qg = _group_heads(q, hkv).astype(jnp.float32)  # [B, Tq, Hkv, G, D]
+    rows = jnp.arange(tq)[:, None] + q_offset  # [Tq, 1]
+
+    def body(carry, blk):
+        m, s, o = carry
+        kblk, vblk, idx = blk
+        cols = idx * block_size + jnp.arange(block_size)[None, :]  # [1, Bk]
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk.astype(jnp.float32)) * scale
+        mask = jnp.ones((tq, block_size), dtype=bool)
+        if causal:
+            mask &= cols <= rows
+        if sliding_window is not None:
+            mask &= cols > rows - sliding_window
+        mask &= cols < tk  # padding block tail
+        maskb = jnp.broadcast_to(mask[None, None, None], scores.shape)
+        if kv_valid_len is not None:
+            valid = cols[0] < kv_valid_len[:, None]  # [B, Bk]
+            maskb = maskb & valid[:, None, None, None, :]
+
+        if star:
+            # Integer-grid online form: exactly equal to the two-pass STAR
+            # softmax (grid subtraction exact; lut[a]*lut[b] = lut[a+b]).
+            jgrid = jnp.where(maskb, quantize_logits(scores, fmt), GRID_SENTINEL)
+            m_blk = jnp.max(jgrid, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            shift = jnp.clip(m_new - m, 0, fmt.num_levels - 1)  # int >= 0
+            r = lut_lib.lookup_gather(shift, table)
+            # carry started at sentinel: force r so that 0-carry stays 0.
+            p = lut_lib.lookup_gather(grid_index(jgrid, m_new[..., None], fmt), table)
+            p = jnp.where(maskb, p, 0.0)
+        else:
+            scores = jnp.where(maskb, scores, NEG_INF)
+            m_blk = jnp.max(scores, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            r = jnp.exp(jnp.minimum(m - m_new, 0.0))
+            p = jnp.exp(scores - m_new[..., None])
+            p = jnp.where(maskb, p, 0.0)
+        s_new = s * r + jnp.sum(p, axis=-1)
+        o_new = o * r[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+        return (m_new, s_new, o_new), None
+
+    ghq = hq // hkv
+    if star:
+        m0 = jnp.full((b, hkv, ghq, tq), GRID_SENTINEL, dtype=jnp.int32)
+    else:
+        m0 = jnp.full((b, hkv, ghq, tq), NEG_INF, dtype=jnp.float32)
+    s0 = jnp.zeros((b, hkv, ghq, tq), dtype=jnp.float32)
+    o0 = jnp.zeros((b, hkv, ghq, tq, d), dtype=jnp.float32)
+    from repro.core.scan_ctl import scan_or_unroll
+
+    (m, s, o), _ = scan_or_unroll(
+        body,
+        (m0, s0, o0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nblk)),
+    )
+    s = jnp.where(s <= 0.0, 1.0, s)
+    out = o / s[..., None]  # the divider
+    out = jnp.moveaxis(out, 3, 1)  # [B, Tq, Hkv, G, D]
+    return out.reshape(b, tq, hq, d).astype(q.dtype)

@@ -1,0 +1,163 @@
+"""Fixed-point formats for the STAR softmax codebook.
+
+The paper stores all possible values of ``x_i - x_max`` (always <= 0, so the
+sign bit is dropped) in a CAM crossbar at a dataset-dependent fixed-point
+precision:
+
+    CNEWS : 8 bits = 6 integer + 2 fractional
+    MRPC  : 9 bits = 6 integer + 3 fractional
+    CoLA  : 7 bits = 5 integer + 2 fractional
+
+On TPU the CAM "match" becomes quantize-to-index: a nonpositive value ``z``
+maps to the unsigned index ``k = round(-z * 2**frac_bits)`` clipped to the
+codebook, and the CAM/LUT pair becomes ``lut[k]`` (gather) or
+``one_hot(k) @ lut`` (MXU form). ``dequantize`` recovers the codebook value
+``-k / 2**frac_bits``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """Unsigned fixed-point format for nonpositive inputs (sign dropped).
+
+    Represents the codebook ``{-k / 2**frac_bits : k = 0 .. 2**bits - 1}``.
+    """
+
+    int_bits: int
+    frac_bits: int
+
+    def __post_init__(self) -> None:
+        if self.int_bits < 0 or self.frac_bits < 0:
+            raise ValueError("bit counts must be nonnegative")
+        if self.total_bits <= 0:
+            raise ValueError("format must have at least one bit")
+        if self.total_bits > 16:
+            raise ValueError(
+                "codebooks beyond 16 bits defeat the purpose of STAR "
+                f"(got {self.total_bits} bits)"
+            )
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def num_levels(self) -> int:
+        return 1 << self.total_bits
+
+    @property
+    def scale(self) -> float:
+        """Levels per unit: index k represents -k / scale."""
+        return float(1 << self.frac_bits)
+
+    @property
+    def min_value(self) -> float:
+        """Most negative representable value."""
+        return -(self.num_levels - 1) / self.scale
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    def short_name(self) -> str:
+        return f"u{self.total_bits}({self.int_bits}i.{self.frac_bits}f)"
+
+
+# Paper's per-dataset formats (Section II).
+FORMAT_CNEWS = FixedPointFormat(int_bits=6, frac_bits=2)  # 8 bits
+FORMAT_MRPC = FixedPointFormat(int_bits=6, frac_bits=3)  # 9 bits
+FORMAT_COLA = FixedPointFormat(int_bits=5, frac_bits=2)  # 7 bits
+
+# Default format used by the framework when none is configured: the paper's
+# 8-bit CNEWS format (the one used for Table I / Fig. 3 comparisons).
+DEFAULT_FORMAT = FORMAT_CNEWS
+
+
+def quantize_index(z: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Map nonpositive values ``z`` to unsigned codebook indices.
+
+    ``k = clip(round(-z * scale), 0, num_levels - 1)``.  Positive inputs
+    (which cannot occur for ``x - max(x)`` but may for user input) clamp to
+    index 0; values below ``min_value`` clamp to the last level — exactly the
+    CAM behaviour (out-of-range entries match the closest stored row).
+
+    NaNs map to the last level (probability ~ e^min_value ~ 0) so a single
+    bad logit cannot poison the row the way ``exp(nan)`` would.
+    """
+    scaled = jnp.round(-z * fmt.scale)
+    scaled = jnp.where(jnp.isnan(scaled), float(fmt.num_levels - 1), scaled)
+    scaled = jnp.clip(scaled, 0.0, float(fmt.num_levels - 1))
+    dtype = jnp.uint8 if fmt.num_levels <= 256 else jnp.uint16
+    return scaled.astype(dtype)
+
+
+def quantize_logits(x: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Snap raw logits onto the signed fixed-point grid: ``round(x * scale)``.
+
+    This is the CAM-at-input view: the paper's CAM matches each ``x_i``
+    against stored codebook rows, i.e. inputs are quantized to the grid
+    *before* the subtraction.  Working on the integer grid makes the online
+    (blocked) softmax **exactly** equal to the two-pass one, because grid
+    subtraction is exact and ``lut[a] * lut[b] == lut[a + b]`` in exact
+    arithmetic.  NaNs map to a very deep sentinel (probability ~ 0).
+    """
+    j = jnp.round(x.astype(jnp.float32) * fmt.scale)
+    j = jnp.where(jnp.isnan(j), jnp.float32(GRID_SENTINEL), j)
+    j = jnp.clip(j, float(GRID_SENTINEL), float(-GRID_SENTINEL))
+    return j.astype(jnp.int32)
+
+
+# Sentinel for "masked / -inf" logits on the integer grid.  Deep enough that
+# (max - sentinel) always clips to the last LUT level, small enough that
+# int32 arithmetic never overflows.
+GRID_SENTINEL = -(1 << 24)
+
+
+def grid_index(j: jax.Array, m: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Codebook index from grid logits ``j`` and grid row-max ``m``.
+
+    ``k = clip(m - j, 0, num_levels - 1)`` — the integer-domain CAM match.
+    """
+    return jnp.clip(m - j, 0, fmt.num_levels - 1)
+
+
+def dequantize(k: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Codebook value for index ``k``: ``-k / scale`` (float32)."""
+    return -(k.astype(jnp.float32)) / fmt.scale
+
+
+def quantize_value(z: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Round-trip ``z`` through the codebook (quantize then dequantize)."""
+    return dequantize(quantize_index(z, fmt), fmt)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_value_ste(z: jax.Array, fmt: FixedPointFormat) -> jax.Array:
+    """Straight-through-estimator round-trip for quantization-aware training.
+
+    Forward: codebook round-trip.  Backward: identity inside the clip range,
+    zero outside (standard STE with saturation masking).
+    """
+    return quantize_value(z, fmt)
+
+
+def _ste_fwd(z, fmt):
+    return quantize_value(z, fmt), z
+
+
+def _ste_bwd(fmt, z, g):
+    in_range = (z <= 0.0) & (z >= fmt.min_value)
+    return (jnp.where(in_range, g, 0.0).astype(g.dtype),)
+
+
+quantize_value_ste.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,88 @@
+"""Exponential lookup tables — the LUT / VMM crossbar contents.
+
+The paper preloads ``exp(z)`` for every representable ``z = x_i - x_max`` in
+a LUT crossbar, and the *same values* in a VMM crossbar used to compute the
+denominator ``sum_j count_j * exp(z_j)``.  Here both live as a single jnp
+array; the two "crossbars" are the two ways it gets multiplied (row gather vs
+count-vector matmul).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import FixedPointFormat
+
+
+@functools.lru_cache(maxsize=64)
+def _exp_lut_np(int_bits: int, frac_bits: int) -> np.ndarray:
+    fmt = FixedPointFormat(int_bits, frac_bits)
+    k = np.arange(fmt.num_levels, dtype=np.float64)
+    return np.exp(-k / fmt.scale).astype(np.float32)
+
+
+def exp_lut(fmt: FixedPointFormat, dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """``lut[k] = exp(-k / 2**frac_bits)`` — shape ``[num_levels]``.
+
+    Entry 0 is exp(0)=1 (the max element); the last entry is
+    ``exp(min_value)`` (the CAM's deepest row).
+    """
+    return jnp.asarray(_exp_lut_np(fmt.int_bits, fmt.frac_bits), dtype=dtype)
+
+
+def exp_lut_int(fmt: FixedPointFormat, out_bits: int = 8) -> jax.Array:
+    """Integer-mantissa LUT for the int8 P·V path (beyond-paper TPU trick).
+
+    ``lut_int[k] = round(exp(-k/scale) * (2**(out_bits-1) - 1))`` — attention
+    probabilities become int8 codes, enabling int8 MXU matmuls for P·V.
+    """
+    if not 2 <= out_bits <= 8:
+        raise ValueError("out_bits must be in [2, 8]")
+    top = (1 << (out_bits - 1)) - 1
+    vals = _exp_lut_np(fmt.int_bits, fmt.frac_bits)
+    return jnp.asarray(np.round(vals * top).astype(np.int8))
+
+
+def int_lut_scale(out_bits: int = 8) -> float:
+    """Dequantization scale for :func:`exp_lut_int` codes."""
+    return 1.0 / float((1 << (out_bits - 1)) - 1)
+
+
+def lookup_gather(k: jax.Array, lut: jax.Array) -> jax.Array:
+    """VPU form: direct LUT gather (the digital shortcut)."""
+    return jnp.take(lut, k.astype(jnp.int32), axis=0)
+
+
+def lookup_onehot(k: jax.Array, lut: jax.Array) -> jax.Array:
+    """MXU form — the faithful crossbar dataflow.
+
+    The CAM match vector is one-hot over codebook rows; driving it through
+    the LUT crossbar is exactly ``one_hot(k) @ lut``.  On TPU this puts the
+    lookup on the systolic array (how XLA itself lowers small-table gathers).
+    """
+    onehot = jax.nn.one_hot(k.astype(jnp.int32), lut.shape[0], dtype=lut.dtype)
+    return onehot @ lut
+
+
+def histogram_counts(k: jax.Array, num_levels: int, axis: int = -1) -> jax.Array:
+    """The counter: ``counts[..., j] = #{i : k[..., i] == j}`` along ``axis``.
+
+    Implemented as a one-hot sum so it stays a dense MXU-friendly op under
+    vmap/jit (no scatter).
+    """
+    onehot = jax.nn.one_hot(k.astype(jnp.int32), num_levels, dtype=jnp.float32)
+    # one_hot appends the level dim at the end, shifting negative axes by one.
+    return jnp.sum(onehot, axis=axis - 1 if axis < 0 else axis)
+
+
+def histogram_dot(counts: jax.Array, lut: jax.Array) -> jax.Array:
+    """The VMM crossbar: ``sum_j counts[..., j] * lut[j]``.
+
+    One vector-matrix product replaces the length-d serial reduction — and
+    dedups the exponentials (only ``num_levels`` distinct values exist).
+    """
+    return counts @ lut.astype(counts.dtype)

@@ -1,0 +1,63 @@
+"""Per-dataset precision policy (paper Section II precision analysis).
+
+The paper profiles the dynamic range of attention logits per dataset on
+BERT-base and picks the smallest fixed-point format preserving accuracy.
+``policy_for`` exposes those formats; ``calibrate_format`` re-derives a
+format from observed logits (the same procedure, runnable on any model).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import (
+    FORMAT_CNEWS,
+    FORMAT_COLA,
+    FORMAT_MRPC,
+    DEFAULT_FORMAT,
+    FixedPointFormat,
+)
+
+_PAPER_POLICIES: Dict[str, FixedPointFormat] = {
+    "cnews": FORMAT_CNEWS,
+    "mrpc": FORMAT_MRPC,
+    "cola": FORMAT_COLA,
+}
+
+
+def policy_for(dataset: str) -> FixedPointFormat:
+    """Paper's calibrated format for a dataset; DEFAULT_FORMAT otherwise."""
+    return _PAPER_POLICIES.get(dataset.lower(), DEFAULT_FORMAT)
+
+
+def calibrate_format(
+    z_samples: np.ndarray | jnp.ndarray,
+    *,
+    max_frac_bits: int = 4,
+    target_max_abs_err: float = 2e-2,
+    coverage: float = 0.9999,
+) -> FixedPointFormat:
+    """Derive (int_bits, frac_bits) from observed ``x - max`` samples.
+
+    int_bits: cover the ``coverage`` quantile of |z| (the CAM depth).
+    frac_bits: smallest count whose softmax output error bound
+    ``e^{r/2} - 1 <= target_max_abs_err`` (r = resolution) holds, capped at
+    ``max_frac_bits``.
+    """
+    z = np.asarray(z_samples, dtype=np.float64).ravel()
+    z = z[np.isfinite(z)]
+    if z.size == 0:
+        return DEFAULT_FORMAT
+    depth = float(np.quantile(np.abs(z), coverage))
+    int_bits = max(1, int(math.ceil(math.log2(max(depth, 1.0) + 1.0))))
+    frac_bits = max_frac_bits
+    for fb in range(0, max_frac_bits + 1):
+        r = 2.0 ** (-fb)
+        if math.exp(r / 2.0) - 1.0 <= target_max_abs_err:
+            frac_bits = fb
+            break
+    return FixedPointFormat(int_bits=int_bits, frac_bits=frac_bits)

@@ -1,0 +1,50 @@
+"""Global scan-unroll context for dry-run cost probes.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count, so FLOPs/bytes/collectives of scanned programs are undercounted.
+The dry-run extracts exact costs from *unrolled* depth-1/2 probe compiles
+(and extrapolates), then takes memory from the real scanned compile.  This
+context flips every structural scan (layer stacks, SSD chunk scans, blocked
+attention) to its unrolled form without touching model code paths.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def unroll_scans_enabled() -> bool:
+    return getattr(_state, "on", False)
+
+
+@contextlib.contextmanager
+def unroll_scans(on: bool = True):
+    prev = getattr(_state, "on", False)
+    _state.on = on
+    try:
+        yield
+    finally:
+        _state.on = prev
+
+
+def scan_or_unroll(body, carry, xs, length=None):
+    """lax.scan unless the unroll context is active."""
+    import jax
+    import jax.numpy as jnp
+
+    if not unroll_scans_enabled():
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys

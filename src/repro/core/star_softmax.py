@@ -1,0 +1,164 @@
+"""STAR softmax — the paper's softmax engine as a JAX primitive.
+
+Pipeline (paper Section II, adapted per DESIGN.md §2):
+
+  1. CAM max search        ->  row max reduction              (VPU)
+  2. SUB crossbar          ->  z = x - max                    (VPU)
+  3. CAM match             ->  k = quantize_index(z, fmt)     (VPU)
+  4. LUT crossbar          ->  num = lut[k]  (gather | one-hot MXU)
+  5. counter + VMM         ->  den = histogram(k) @ lut       (MXU)
+  6. divider               ->  out = num / den                (VPU)
+
+Three execution ``mode``s, numerically equivalent up to float summation
+order:
+
+  * ``"gather"``    — steps 4-5 by direct gather + sum (digital shortcut,
+                      fastest on VPU for small rows).
+  * ``"onehot"``    — step 4 via ``one_hot(k) @ lut`` (the faithful crossbar
+                      dataflow; MXU).
+  * ``"histogram"`` — step 5 via the counter + VMM trick: the denominator is
+                      ``counts @ lut``; numerators still come from the LUT.
+                      This is the paper's headline dataflow: the length-d
+                      reduction collapses to a ``num_levels``-length VMM.
+
+Training: ``star_softmax_ste`` keeps the quantized forward and routes
+gradients through the exact softmax vjp evaluated at the *quantized*
+probabilities (quantization-aware training).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core.fixedpoint import (
+    DEFAULT_FORMAT,
+    GRID_SENTINEL,
+    FixedPointFormat,
+    grid_index,
+    quantize_logits,
+)
+
+Modes = ("gather", "onehot", "histogram")
+
+
+def exact_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """The FP oracle (numerically-stable softmax)."""
+    return jax.nn.softmax(x, axis=axis)
+
+
+def _move_axis_last(x: jax.Array, axis: int):
+    axis = axis % x.ndim
+    if axis == x.ndim - 1:
+        return x, None
+    return jnp.moveaxis(x, axis, -1), axis
+
+
+def star_softmax(
+    x: jax.Array,
+    fmt: FixedPointFormat = DEFAULT_FORMAT,
+    *,
+    axis: int = -1,
+    mode: str = "histogram",
+    where: Optional[jax.Array] = None,
+    dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """Quantized LUT softmax along ``axis``.
+
+    ``where`` masks entries out of the softmax (masked entries get
+    probability 0 and do not enter the denominator) — needed for attention
+    masking, where the paper's engine simply never streams masked scores.
+    """
+    if mode not in Modes:
+        raise ValueError(f"mode must be one of {Modes}, got {mode!r}")
+    out_dtype = dtype or (x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    moved, orig_axis = _move_axis_last(xf, axis)
+    wmask = None
+    if where is not None:
+        wmask = jnp.broadcast_to(where, x.shape)
+        wmask, _ = _move_axis_last(wmask, axis)
+
+    # CAM-at-input quantization: snap logits onto the signed integer grid,
+    # then max search and subtraction are exact integer ops (DESIGN.md §2).
+    j = quantize_logits(moved, fmt)
+    if wmask is not None:
+        j = jnp.where(wmask, j, GRID_SENTINEL)
+    m = jnp.max(j, axis=-1, keepdims=True)  # CAM max search (integer)
+    k = grid_index(j, m, fmt)  # SUB crossbar + CAM match
+
+    table = lut_lib.exp_lut(fmt, dtype=jnp.float32)
+    if mode == "onehot":
+        num = lut_lib.lookup_onehot(k, table)
+    else:
+        num = lut_lib.lookup_gather(k, table)
+
+    if where is not None:
+        num = jnp.where(wmask, num, 0.0)
+
+    if mode == "histogram":
+        if where is None:
+            counts = lut_lib.histogram_counts(k, fmt.num_levels, axis=-1)
+        else:
+            # Masked entries must not be counted: weight the one-hot rows.
+            counts = _weighted_histogram(k, wmask, fmt.num_levels)
+        den = lut_lib.histogram_dot(counts, table)[..., None]
+    else:
+        den = jnp.sum(num, axis=-1, keepdims=True)
+
+    den = jnp.where(den <= 0.0, 1.0, den)  # fully-masked rows -> zeros
+    out = num / den
+    if orig_axis is not None:
+        out = jnp.moveaxis(out, -1, orig_axis)
+    return out.astype(out_dtype)
+
+
+def _weighted_histogram(k: jax.Array, weight_mask: jax.Array, num_levels: int) -> jax.Array:
+    onehot = jax.nn.one_hot(k.astype(jnp.int32), num_levels, dtype=jnp.float32)
+    onehot = onehot * weight_mask.astype(jnp.float32)[..., None]
+    return jnp.sum(onehot, axis=-2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def star_softmax_ste(
+    x: jax.Array,
+    fmt: FixedPointFormat = DEFAULT_FORMAT,
+    axis: int = -1,
+    mode: str = "histogram",
+) -> jax.Array:
+    """STAR softmax with a straight-through backward.
+
+    Backward uses the exact softmax vjp evaluated at the quantized forward
+    probabilities: ``dx = p * (g - sum(g * p))``.  This is the standard QAT
+    treatment — the quantizer is transparent to the gradient, the softmax
+    geometry is kept.
+    """
+    return star_softmax(x, fmt, axis=axis, mode=mode)
+
+
+def _ste_fwd(x, fmt, axis, mode):
+    p = star_softmax(x, fmt, axis=axis, mode=mode)
+    return p, p
+
+
+def _ste_bwd(fmt, axis, mode, p, g):
+    inner = jnp.sum(g * p, axis=axis, keepdims=True)
+    return ((p * (g - inner)).astype(g.dtype),)
+
+
+star_softmax_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantization_error(
+    x: jax.Array, fmt: FixedPointFormat, *, axis: int = -1, mode: str = "histogram"
+) -> jax.Array:
+    """Max |star_softmax - exact_softmax| per row (benchmark helper)."""
+    err = jnp.abs(
+        star_softmax(x, fmt, axis=axis, mode=mode) - exact_softmax(x, axis=axis)
+    )
+    return jnp.max(err, axis=axis)

@@ -1,0 +1,38 @@
+"""Elastic scaling: re-mesh planning + checkpoint-based resharding.
+
+Checkpoints are mesh-agnostic (unsharded arrays), so elasticity reduces to:
+  1. pick a new mesh for the surviving device count (``plan_mesh``),
+  2. rebuild shardings from the same logical rules on the new mesh,
+  3. ``checkpointer.restore(..., shardings=new)``.
+
+``plan_mesh`` keeps the model axis as large as possible (TP degree is set
+by model size, not fleet size) and gives the remainder to data.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import Rules, param_shardings
+
+
+def plan_mesh(
+    n_devices: int, *, model_parallel: int, devices=None
+) -> Mesh:
+    """Largest feasible (data, model) mesh for ``n_devices``."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp != 0:
+        mp //= 2
+    dp = n_devices // mp
+    devs = devices if devices is not None else jax.devices()[:n_devices]
+    import numpy as np
+
+    return Mesh(np.asarray(devs).reshape(dp, mp), ("data", "model"))
+
+
+def reshard_plan(specs_tree, rules: Rules, new_mesh: Mesh):
+    """Shardings for restore() on the new mesh — same logical rules."""
+    return param_shardings(specs_tree, rules, new_mesh)

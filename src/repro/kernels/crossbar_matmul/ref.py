@@ -1,0 +1,133 @@
+"""Pure-jnp oracle for the crossbar MatMul engine model.
+
+Behavioral model of the ReTransformer/PipeLayer-style RRAM MatMul engine the
+paper builds on (its MatMul engine "follows the design in ReTransformer"):
+
+  * weights quantized to 8-bit ints, stored across 128x128 crossbar tiles;
+  * activations quantized to 8-bit ints (multi-bit DAC variant — bit-serial
+    DACs at 8-bit input precision change error statistics negligibly and are
+    a documented simplification, DESIGN.md §2);
+  * each tile's analog partial sum passes a **5-bit ADC** (the paper's
+    MatMul engine setting): uniform signed quantization, full-scale range =
+    the tile's worst-case column sum;
+  * quantized partials accumulate digitally across K tiles.
+
+This is the *baseline accuracy* model used by the benchmarks; the
+performance path of the framework uses native MXU matmuls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarSpec:
+    tile_rows: int = 128  # crossbar rows (K per tile)
+    tile_cols: int = 128  # crossbar cols (N per tile)
+    adc_bits: int = 5
+    weight_bits: int = 8
+    input_bits: int = 8
+
+    @property
+    def adc_levels(self) -> int:
+        # signed symmetric: [-(2^(b-1)-1), +(2^(b-1)-1)]
+        return (1 << (self.adc_bits - 1)) - 1
+
+
+DEFAULT_SPEC = CrossbarSpec()
+
+
+def _sym_quant(x: jax.Array, bits: int):
+    top = (1 << (bits - 1)) - 1
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / top
+    q = jnp.clip(jnp.round(x / s), -top, top).astype(jnp.int32)
+    return q, s
+
+
+def quantize_operands(x: jax.Array, w: jax.Array, spec: CrossbarSpec = DEFAULT_SPEC):
+    """(xq, sx), (wq, sw) with per-tensor symmetric scales."""
+    xq, sx = _sym_quant(x.astype(jnp.float32), spec.input_bits)
+    wq, sw = _sym_quant(w.astype(jnp.float32), spec.weight_bits)
+    return (xq, sx), (wq, sw)
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if not pad:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def adc_step(
+    xq: jax.Array,
+    wq: jax.Array,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    ranging: str = "calibrated",
+) -> jax.Array:
+    """Per-(k-tile, n-tile) ADC quantization step, shape [Kt, Nt].
+
+    ``"calibrated"`` (default, NeuroSim-style): range = observed max
+    |partial sum| per tile — what a deployed design programs after
+    calibration.  ``"fullscale"``: worst-case column-sum range (pessimistic;
+    5-bit ADCs are unusable at this setting, included for ablation).
+    Operands must already be padded to tile multiples.
+    """
+    m = xq.shape[0]
+    kt = xq.shape[1] // spec.tile_rows
+    nt = wq.shape[1] // spec.tile_cols
+    xtiles = xq.reshape(m, kt, spec.tile_rows)
+    wtiles = wq.reshape(kt, spec.tile_rows, nt, spec.tile_cols)
+    if ranging == "fullscale":
+        in_top = (1 << (spec.input_bits - 1)) - 1
+        fullscale = jnp.max(jnp.sum(jnp.abs(wtiles), axis=1), axis=-1) * in_top
+    elif ranging == "calibrated":
+        partial = jnp.einsum(
+            "mkr,krnc->kmnc", xtiles.astype(jnp.float32), wtiles.astype(jnp.float32)
+        )
+        fullscale = jnp.max(jnp.abs(partial), axis=(1, 3))  # [kt, nt]
+    else:
+        raise ValueError(f"unknown ranging {ranging!r}")
+    return (jnp.maximum(fullscale, 1.0) / spec.adc_levels).astype(jnp.float32)
+
+
+def crossbar_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    ranging: str = "calibrated",
+) -> jax.Array:
+    """x [M, K] @ w [K, N] through the crossbar model (float32 out)."""
+    m, kdim = x.shape
+    _, n = w.shape
+    (xq, sx), (wq, sw) = quantize_operands(x, w, spec)
+
+    xq = _pad_to(xq, 1, spec.tile_rows)
+    wq = _pad_to(_pad_to(wq, 0, spec.tile_rows), 1, spec.tile_cols)
+    kt = xq.shape[1] // spec.tile_rows
+    nt = wq.shape[1] // spec.tile_cols
+
+    xtiles = xq.reshape(m, kt, spec.tile_rows)
+    wtiles = wq.reshape(kt, spec.tile_rows, nt, spec.tile_cols)
+    step = adc_step(xq, wq, spec, ranging)  # [kt, nt]
+
+    acc = jnp.zeros((m, nt, spec.tile_cols), jnp.float32)
+    for k in range(kt):
+        partial = jnp.einsum(
+            "mr,rnc->mnc", xtiles[:, k].astype(jnp.float32),
+            wtiles[k].astype(jnp.float32),
+        )  # exact integer-valued partial
+        st = step[k][None, :, None]
+        adc = jnp.clip(jnp.round(partial / st), -spec.adc_levels, spec.adc_levels) * st
+        acc = acc + adc
+    out = acc.reshape(m, nt * spec.tile_cols)[:, :n]
+    return out * (sx * sw)
+
+
+def exact_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,50 @@
+"""Public wrapper for flash_star: layout handling + defaults.
+
+Accepts the framework-native layout ``q [B, Tq, Hq, D]``, ``k/v
+[B, Tk, Hkv, D]`` and returns ``[B, Tq, Hq, D]``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
+from repro.kernels.flash_star.kernel import flash_star_attention
+
+
+def flash_star_op(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    fmt: Optional[FixedPointFormat] = DEFAULT_FORMAT,  # None = exact softmax
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    pv_int8: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((b,), tk, dtype=jnp.int32)
+    info = jnp.concatenate(
+        [jnp.asarray(q_offset, jnp.int32).reshape(1), kv_valid_len.astype(jnp.int32)]
+    )
+    qh = jnp.transpose(q, (0, 2, 1, 3))
+    kh = jnp.transpose(k, (0, 2, 1, 3))
+    vh = jnp.transpose(v, (0, 2, 1, 3))
+    out = flash_star_attention(
+        qh, kh, vh, info,
+        fmt=fmt, causal=causal, sliding_window=sliding_window,
+        sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+        pv_int8=pv_int8, interpret=interpret,
+    )
+    return jnp.transpose(out, (0, 2, 1, 3))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for flash_star: the core attention paths.
+
+``flash_star`` must match ``blocked_attention`` (the lax.scan vector
+pipeline) to float32 rounding, and ``attention`` (whole-operand two-pass)
+to the same tolerance — the integer-grid STAR arithmetic makes all three
+forms numerically identical up to summation order.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.attention import SoftmaxConfig, attention, blocked_attention
+from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
+
+
+def _cfg(fmt: Optional[FixedPointFormat]) -> SoftmaxConfig:
+    if fmt is None:
+        return SoftmaxConfig(kind="exact")
+    return SoftmaxConfig(kind="star", fmt=fmt, mode="gather")
+
+
+def flash_star_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    fmt: Optional[FixedPointFormat] = DEFAULT_FORMAT,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_valid_len=None,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    """Two-pass whole-operand reference."""
+    return attention(
+        q, k, v, softmax=_cfg(fmt), causal=causal,
+        sliding_window=sliding_window, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, scale=sm_scale,
+    )
+
+
+def flash_star_blocked_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    fmt: Optional[FixedPointFormat] = DEFAULT_FORMAT,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    kv_valid_len=None,
+    sm_scale: Optional[float] = None,
+    block_size: int = 128,
+) -> jax.Array:
+    """Online lax.scan reference (same schedule as the kernel)."""
+    return blocked_attention(
+        q, k, v, softmax=_cfg(fmt), causal=causal,
+        sliding_window=sliding_window, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, scale=sm_scale, block_size=block_size,
+    )

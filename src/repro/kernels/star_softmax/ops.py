@@ -1,0 +1,32 @@
+"""Public jit'd wrapper for the STAR softmax Pallas kernel.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware pass ``interpret=False`` (the launcher does this via
+``repro.launch`` when it detects TPU devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
+from repro.kernels.star_softmax.kernel import star_softmax_pallas
+
+
+def star_softmax_op(
+    x: jax.Array,
+    fmt: FixedPointFormat = DEFAULT_FORMAT,
+    *,
+    block_rows: int = 8,
+    use_histogram: bool = False,
+    use_mxu_lut: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    return star_softmax_pallas(
+        x,
+        fmt=fmt,
+        block_rows=block_rows,
+        use_histogram=use_histogram,
+        use_mxu_lut=use_mxu_lut,
+        interpret=interpret,
+    )

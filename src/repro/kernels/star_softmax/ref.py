@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the STAR softmax kernel.
+
+The kernel must match this reference (which in turn is the two-pass
+``repro.core.star_softmax``) to float32 rounding: the kernel evaluates LUT
+entries arithmetically (``exp`` of the dequantized index, on the VPU) while
+the reference gathers from the prebuilt table — identical codebook values up
+to 1 ulp of libm vs XLA exp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
+from repro.core.star_softmax import star_softmax
+
+
+def star_softmax_ref(
+    x: jax.Array,
+    fmt: FixedPointFormat = DEFAULT_FORMAT,
+    *,
+    mode: str = "gather",
+) -> jax.Array:
+    """Two-pass STAR softmax over the last axis (float32 out)."""
+    return star_softmax(x, fmt, axis=-1, mode=mode, dtype=jnp.float32)
+
+
+def exact_softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)

@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(dirpath: str) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def _fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and not r.get("tag")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | step | t_compute | t_memory | t_collective | dominant | "
+        "roofline frac | peak HBM/dev | fits 16GB | MODEL/HLO flops | coll breakdown |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        coll = r.get("collectives", {}).get("by_op", {})
+        top = sorted(coll.items(), key=lambda kv: -kv[1])[:2]
+        coll_s = ", ".join(f"{k.replace('collective-','c-')} {_fmt_b(v)}" for k, v in top) or "-"
+        peak = r.get("peak_bytes_per_dev", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} | "
+            f"{_fmt_s(r['t_collective_s'])} | **{r['dominant']}** | "
+            f"{r['roofline_fraction']*100:.1f}% | {_fmt_b(peak)} | "
+            f"{'yes' if peak <= HBM_PER_CHIP else 'NO'} | "
+            f"{r['useful_flops_ratio']:.2f} | {coll_s} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and not r.get("tag")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | chips | compile | FLOPs/dev | bytes/dev | coll bytes/dev | peak HBM/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} | {r['compile_s']:.0f}s | "
+            f"{r['flops_per_dev']:.3g} | {_fmt_b(r['bytes_per_dev'])} | "
+            f"{_fmt_b(r['coll_bytes_per_dev'])} | {_fmt_b(r.get('peak_bytes_per_dev', 0))} |"
+        )
+    return "\n".join(out)
+
+
+def summary(recs: List[Dict]) -> str:
+    single = [r for r in recs if r["mesh"] == "single" and not r.get("tag")]
+    multi = [r for r in recs if r["mesh"] == "multi" and not r.get("tag")]
+    lines = [
+        f"single-pod cells compiled: {len(single)} / 33",
+        f"multi-pod cells compiled:  {len(multi)} / 33",
+    ]
+    by_dom: Dict[str, int] = {}
+    for r in single:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    lines.append(f"dominant terms (single-pod): {by_dom}")
+    worst = sorted(single, key=lambda r: r["roofline_fraction"])[:3]
+    lines.append(
+        "worst roofline fractions: "
+        + ", ".join(f"{r['arch']}/{r['shape']} {r['roofline_fraction']*100:.1f}%" for r in worst)
+    )
+    most_coll = sorted(single, key=lambda r: -r["t_collective_s"])[:3]
+    lines.append(
+        "most collective-bound: "
+        + ", ".join(f"{r['arch']}/{r['shape']} {_fmt_s(r['t_collective_s'])}" for r in most_coll)
+    )
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Dry-run (multi-pod, 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns (step_kind, abstract inputs) — no device
+allocation, weak-type-correct, shardable.  The dry-run lowers the matching
+step function against these.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.param import shape_tree
+from repro.models.registry import build_model
+from repro.train.state import state_specs
+
+# decode-time encoder memory length for enc-dec (30s audio at 50 fps ~ 1500;
+# rounded up to a shardable 4096)
+ENCDEC_DECODE_SRC_LEN = 4096
+# prefill cell: decoder prompt is 1 BOS token; self cache sized small
+ENCDEC_PREFILL_SELF_CACHE = 1024
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training batch stand-ins."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        # patch prefix + text tokens sum to the cell's seq_len
+        text = s - cfg.num_patches
+        out["tokens"] = _sds((b, text), jnp.int32)
+        out["labels"] = _sds((b, text), jnp.int32)
+        out["patch_embeds"] = _sds((b, cfg.num_patches, cfg.frontend_dim), jnp.float32)
+    elif cfg.family == "encdec":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+        out["src_embeds"] = _sds((b, s, cfg.frontend_dim or cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[str, Dict[str, Any]]:
+    """Returns (step_kind, {name: abstract value}) for the cell."""
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        return "train", {
+            "state": shape_tree(state_specs(pspecs)),
+            "batch": batch_specs(cfg, shape),
+        }
+
+    params = shape_tree(pspecs)
+
+    if shape.kind == "prefill":
+        inputs: Dict[str, Any] = {"params": params}
+        if cfg.family == "encdec":
+            inputs["tokens"] = _sds((b, 1), jnp.int32)
+            inputs["src_embeds"] = _sds((b, s, cfg.frontend_dim or cfg.d_model), jnp.float32)
+            inputs["_max_len"] = ENCDEC_PREFILL_SELF_CACHE
+        elif cfg.family == "vlm":
+            inputs["tokens"] = _sds((b, s - cfg.num_patches), jnp.int32)
+            inputs["patch_embeds"] = _sds((b, cfg.num_patches, cfg.frontend_dim), jnp.float32)
+            inputs["_max_len"] = s + 1
+        else:
+            inputs["tokens"] = _sds((b, s), jnp.int32)
+            inputs["_max_len"] = s + 1
+        return "prefill", inputs
+
+    # decode: one new token against a seq_len-deep cache
+    if cfg.family == "encdec":
+        cache = shape_tree(model.cache_spec(b, s, src_len=ENCDEC_DECODE_SRC_LEN))
+    else:
+        cache = shape_tree(model.cache_spec(b, s))
+    return "decode", {
+        "params": params,
+        "cache": cache,
+        "tokens": _sds((b, 1), jnp.int32),
+    }

@@ -1,0 +1,243 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, T_src, frontend_dim]; a linear
+projection maps them into the model.  Text decoder: token embeddings +
+sinusoidal positions, causal self-attention + cross-attention, both through
+the STAR softmax engine.  LayerNorm (pre-LN) as in the NLLB/seamless stack.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.models.transformer import _stack_specs, cross_entropy
+
+Params = Dict[str, Any]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    # -- specs ---------------------------------------------------------------
+
+    def enc_block_spec(self) -> Params:
+        cfg = self.cfg
+        return {
+            "ln1": L.spec_layernorm(cfg),
+            "attn": L.spec_attention(cfg),
+            "ln2": L.spec_layernorm(cfg),
+            "mlp": L.spec_mlp(cfg),
+        }
+
+    def dec_block_spec(self) -> Params:
+        cfg = self.cfg
+        return {
+            "ln1": L.spec_layernorm(cfg),
+            "self_attn": L.spec_attention(cfg),
+            "ln2": L.spec_layernorm(cfg),
+            "cross_attn": L.spec_attention(cfg, cross=True),
+            "ln3": L.spec_layernorm(cfg),
+            "mlp": L.spec_mlp(cfg),
+        }
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        fd = cfg.frontend_dim or cfg.d_model
+        return {
+            "frontend_proj": {
+                "kernel": ParamSpec((fd, cfg.d_model), (None, "embed"), L.pdtype(cfg), "fan_in")
+            },
+            "embed": L.spec_embedding(cfg),
+            "enc_blocks": _stack_specs(self.enc_block_spec(), cfg.num_layers),
+            "enc_norm": L.spec_layernorm(cfg),
+            "dec_blocks": _stack_specs(self.dec_block_spec(), cfg.num_decoder_layers),
+            "dec_norm": L.spec_layernorm(cfg),
+            "unembed": L.spec_unembed(cfg),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+
+    def encode(self, params: Params, src_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        dt = L.cdtype(cfg)
+        x = jnp.einsum(
+            "btf,fd->btd", src_embeds.astype(dt), params["frontend_proj"]["kernel"].astype(dt)
+        )
+        x = x + L.sinusoidal_positions(0, x.shape[1], cfg.d_model).astype(dt)[None]
+
+        def body(h, bp):
+            a, _, _ = L.attention_block(
+                bp["attn"], L.layernorm(bp["ln1"], h, cfg.norm_eps), cfg,
+                causal=False, use_rope=False,
+            )
+            h = h + L.attention_out(bp["attn"], a, cfg)
+            h = h + L.mlp(bp["mlp"], L.layernorm(bp["ln2"], h, cfg.norm_eps), cfg)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = L.scan_blocks(body, x, params["enc_blocks"])
+        return L.layernorm(params["enc_norm"], h, cfg.norm_eps)
+
+    # -- decoder ---------------------------------------------------------------
+
+    def _dec_block(self, bp, h, memory, cfg, cache=None, cache_len=None, pos0=0):
+        self_cache = None
+        if cache is not None:
+            self_cache = {"k": cache["k"], "v": cache["v"], "len": cache_len}
+        a, new_self, kv = L.attention_block(
+            bp["self_attn"], L.layernorm(bp["ln1"], h, cfg.norm_eps), cfg,
+            causal=True, cache=self_cache, use_rope=False,
+        )
+        h = h + L.attention_out(bp["self_attn"], a, cfg)
+        c, _, cross_kv = L.attention_block(
+            bp["cross_attn"], L.layernorm(bp["ln2"], h, cfg.norm_eps), cfg,
+            xkv=memory, use_rope=False,
+        )
+        h = h + L.attention_out(bp["cross_attn"], c, cfg)
+        h = h + L.mlp(bp["mlp"], L.layernorm(bp["ln3"], h, cfg.norm_eps), cfg)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"k": new_self["k"], "v": new_self["v"]}
+        return h, new_cache, kv
+
+    def decode_seq(
+        self, params: Params, memory: jax.Array, tokens: jax.Array, pos0: int | jax.Array = 0
+    ) -> jax.Array:
+        """Full-sequence causal decoder -> hidden states."""
+        cfg = self.cfg
+        dt = L.cdtype(cfg)
+        x = L.embed(params["embed"], tokens, cfg)
+        x = x + L.sinusoidal_positions(pos0, tokens.shape[1], cfg.d_model).astype(dt)[None]
+
+        def body(h, bp):
+            h, _, _ = self._dec_block(bp, h, memory, cfg)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = L.scan_blocks(body, x, params["dec_blocks"])
+        return L.layernorm(params["dec_norm"], h, cfg.norm_eps)
+
+    # -- public API --------------------------------------------------------------
+
+    def forward(self, params: Params, batch_or_tokens, **kw) -> jax.Array:
+        """Training forward.  Accepts {'src_embeds', 'tokens'} or positional."""
+        if isinstance(batch_or_tokens, dict):
+            src = batch_or_tokens["src_embeds"]
+            tokens = batch_or_tokens["tokens"]
+        else:
+            tokens = batch_or_tokens
+            src = kw["src_embeds"]
+        memory = self.encode(params, src)
+        h = self.decode_seq(params, memory, tokens)
+        return L.unembed(params["unembed"], h, self.cfg, params["embed"])
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits = self.forward(params, batch)
+        return cross_entropy(logits, batch["labels"])
+
+    # -- serving --------------------------------------------------------------
+
+    def cache_spec(self, batch: int, max_len: int, src_len: int = 4096) -> Params:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        hd = cfg.resolved_head_dim
+        self_kv = (cfg.num_decoder_layers, batch, max_len, cfg.num_kv_heads, hd)
+        cross_kv = (cfg.num_decoder_layers, batch, src_len, cfg.num_kv_heads, hd)
+        axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+        return {
+            "self": {
+                "k": ParamSpec(self_kv, axes, dt, "zeros"),
+                "v": ParamSpec(self_kv, axes, dt, "zeros"),
+            },
+            "cross": {
+                "k": ParamSpec(cross_kv, axes, dt, "zeros"),
+                "v": ParamSpec(cross_kv, axes, dt, "zeros"),
+            },
+            "len": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+
+    def prefill(
+        self, params: Params, tokens: jax.Array, max_len: int,
+        *, src_embeds: jax.Array, **_,
+    ) -> Tuple[jax.Array, Params]:
+        """Encode source; run decoder prompt; prime self+cross caches."""
+        cfg = self.cfg
+        dt = L.cdtype(cfg)
+        memory = self.encode(params, src_embeds)
+        b, t = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg)
+        x = x + L.sinusoidal_positions(0, t, cfg.d_model).astype(dt)[None]
+
+        def body(h, bp):
+            h, _, kv = self._dec_block(bp, h, memory, cfg)
+            return h, {"k": kv[0], "v": kv[1]}
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, self_kvs = L.scan_blocks(body, x, params["dec_blocks"])
+        h = L.layernorm(params["dec_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h[:, -1:], cfg, params["embed"])
+
+        # cross K/V: project memory through each decoder layer's cross proj
+        def cross_body(_, bp):
+            k = jnp.einsum("btd,dh->bth", memory, bp["cross_attn"]["wk"].astype(dt))
+            v = jnp.einsum("btd,dh->bth", memory, bp["cross_attn"]["wv"].astype(dt))
+            hd = cfg.resolved_head_dim
+            k = k.reshape(b, memory.shape[1], cfg.num_kv_heads, hd)
+            v = v.reshape(b, memory.shape[1], cfg.num_kv_heads, hd)
+            return 0, {"k": k, "v": v}
+
+        _, cross_kvs = L.scan_blocks(cross_body, 0, params["dec_blocks"])
+
+        k_init, v_init = L.fit_window_cache(self_kvs["k"], self_kvs["v"], 2, max_len, t)
+        return logits, {
+            "self": {"k": k_init, "v": v_init},
+            "cross": cross_kvs,
+            "len": jnp.asarray(t, jnp.int32),
+        }
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array):
+        cfg = self.cfg
+        dt = L.cdtype(cfg)
+        b = tokens.shape[0]
+        x = L.embed(params["embed"], tokens, cfg)
+        x = x + L.sinusoidal_positions(cache["len"], 1, cfg.d_model).astype(dt)[None]
+
+        def body(h, xs):
+            bp, sc, cc = xs["p"], xs["s"], xs["x"]
+            a, new_self, _ = L.attention_block(
+                bp["self_attn"], L.layernorm(bp["ln1"], h, cfg.norm_eps), cfg,
+                causal=True, cache={**sc, "len": cache["len"]}, use_rope=False,
+            )
+            h = h + L.attention_out(bp["self_attn"], a, cfg)
+            # cross-attn against cached memory K/V
+            hn = L.layernorm(bp["ln2"], h, cfg.norm_eps)
+            q = jnp.einsum("btd,dh->bth", hn, bp["cross_attn"]["wq"].astype(dt))
+            hd = cfg.resolved_head_dim
+            q = q.reshape(b, 1, cfg.num_heads, hd)
+            from repro.core.attention import attention as _attn
+
+            ctx = _attn(q, cc["k"], cc["v"], softmax=cfg.softmax_config, causal=False)
+            ctx = ctx.reshape(b, 1, -1)
+            h = h + L.attention_out(bp["cross_attn"], ctx, cfg)
+            h = h + L.mlp(bp["mlp"], L.layernorm(bp["ln3"], h, cfg.norm_eps), cfg)
+            return h, {"k": new_self["k"], "v": new_self["v"]}
+
+        h, new_self = L.scan_blocks(
+            body, x, {"p": params["dec_blocks"], "s": cache["self"], "x": cache["cross"]}
+        )
+        h = L.layernorm(params["dec_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h, cfg, params["embed"])
+        return logits, {
+            "self": new_self, "cross": cache["cross"], "len": cache["len"] + 1,
+        }

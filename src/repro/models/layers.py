@@ -1,0 +1,493 @@
+"""Shared model building blocks (functional style: spec_* declares params,
+apply-style functions consume them).  All attention flows through the STAR
+softmax engine unless the config says otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import SoftmaxConfig, attention, blocked_attention
+from repro.core.star_softmax import star_softmax
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models.param import ParamSpec
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def spec_rmsnorm(cfg: ModelConfig, dim: Optional[int] = None) -> Params:
+    return {"scale": ParamSpec((dim or cfg.d_model,), ("embed",), pdtype(cfg), "ones")}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def spec_layernorm(cfg: ModelConfig, dim: Optional[int] = None) -> Params:
+    d = dim or cfg.d_model
+    return {
+        "scale": ParamSpec((d,), ("embed",), pdtype(cfg), "ones"),
+        "bias": ParamSpec((d,), ("embed",), pdtype(cfg), "zeros"),
+    }
+
+
+def layernorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+def spec_embedding(cfg: ModelConfig) -> Params:
+    return {
+        "table": ParamSpec(
+            (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), pdtype(cfg), "embed"
+        )
+    }
+
+
+def embed(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    out = jnp.take(p["table"].astype(cdtype(cfg)), tokens, axis=0)
+    return wlc(out, ("batch", "seq", "embed"))
+
+
+def spec_unembed(cfg: ModelConfig) -> Params:
+    if cfg.tie_embeddings:
+        return {}
+    return {
+        "kernel": ParamSpec(
+            (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), pdtype(cfg), "fan_in"
+        )
+    }
+
+
+def unembed(p: Params, x: jax.Array, cfg: ModelConfig, embed_params: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        kernel = embed_params["table"].astype(cdtype(cfg)).T
+    else:
+        kernel = p["kernel"].astype(cdtype(cfg))
+    logits = jnp.einsum("...d,dv->...v", x, kernel)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding columns
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return wlc(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, T, H, D] rotated by positions [B, T] (half-split convention)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, ...]
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions [B, T, 3] = (t, h, w) ids;
+    ``sections`` splits the half-dim into per-stream frequency bands."""
+    import numpy as np
+
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    # which positional stream (t/h/w) drives each frequency band — static
+    stream = jnp.asarray(np.repeat(np.arange(len(sections)), sections))  # [half]
+    pos = jnp.take(positions.astype(jnp.float32), stream, axis=-1)  # [B, T, half]
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(t0: int | jax.Array, length: int, d_model: int) -> jax.Array:
+    """Classic sinusoidal table slice [length, d_model] (seamless enc-dec)."""
+    pos = (jnp.arange(length) + t0)[:, None].astype(jnp.float32)
+    half = d_model // 2
+    div = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+
+
+def spec_attention(cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    pd = pdtype(cfg)
+    p: Params = {
+        "wq": ParamSpec((d, hq * hd), ("embed", "heads"), pd, "fan_in"),
+        "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), pd, "fan_in"),
+        "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), pd, "fan_in"),
+        "wo": ParamSpec((hq * hd, d), ("heads", "embed"), pd, "fan_in"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((hq * hd,), ("heads",), pd, "zeros")
+        p["bk"] = ParamSpec((hkv * hd,), ("kv_heads",), pd, "zeros")
+        p["bv"] = ParamSpec((hkv * hd,), ("kv_heads",), pd, "zeros")
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, xkv: jax.Array, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dh->bth", xkv, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dh->bth", xkv, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    b, tq = q.shape[0], q.shape[1]
+    tk = k.shape[1]
+    q = q.reshape(b, tq, cfg.num_heads, hd)
+    k = k.reshape(b, tk, cfg.num_kv_heads, hd)
+    v = v.reshape(b, tk, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def attention_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    positions: Optional[jax.Array] = None,  # [B, T] or [B, T, 3] for M-RoPE
+    sliding_window: Optional[int] = None,
+    cache: Optional[Params] = None,  # {"k","v","len"} decode cache
+    xkv: Optional[jax.Array] = None,  # cross-attention memory
+    kv_valid_len: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[Params], Tuple[jax.Array, jax.Array]]:
+    """Self- or cross-attention with optional KV cache.
+
+    Returns ``(out, cache', (k, v))`` — the fresh (rotated) K/V of this call
+    so prefill can prime caches without recomputing projections."""
+    b, tq, _ = x.shape
+    softmax = cfg.softmax_config
+    q, k, v = _project_qkv(p, x, x if xkv is None else xkv, cfg)
+
+    if use_rope and xkv is None:
+        if positions is None:
+            base = cache["len"] if cache is not None else 0
+            positions = base + jnp.arange(tq)[None, :].astype(jnp.int32)
+            positions = jnp.broadcast_to(positions, (b, tq))
+        if cfg.mrope_sections and positions.ndim == 3:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            if positions.ndim == 3:
+                positions = positions[..., 0]
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cfg.seq_parallel_activations and tq > 1:
+        # heads that don't divide the model axis (e.g. 28, 56) leave the
+        # score tensor replicated and XLA all-reduces partial products per
+        # KV block; sharding the q/score ROWS over the model axis instead
+        # keeps softmax row-local (§Perf prefill finding)
+        q = wlc(q, ("batch", "act_seq", "heads", None))
+    else:
+        q = wlc(q, ("batch", "seq", "heads", None))
+    q_offset: jax.Array | int = 0
+    new_cache = None
+    if cache is not None:
+        # ring-buffer for sliding windows, append otherwise
+        if sliding_window is not None and cache["k"].shape[1] <= sliding_window:
+            assert tq == 1, "ring-buffer window cache only supports 1-token decode"
+            idx = cache["len"] % cache["k"].shape[1]
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+            # positions of ring slots are implicit; use unrotated ring order
+            # only when tq == 1 (decode), which is the serving path.
+            k_full, v_full = ck, cv
+            window_decode = True
+        elif cfg.kv_update == "onehot" and tq == 1:
+            # sharding-friendly append: elementwise blend, no cross-shard
+            # dynamic update (see ModelConfig.kv_update)
+            hit = (jnp.arange(cache["k"].shape[1]) == cache["len"])[None, :, None, None]
+            ck = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+            k_full, v_full = ck, cv
+            window_decode = False
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache["len"], 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache["len"], 0, 0))
+            k_full, v_full = ck, cv
+            window_decode = False
+        new_len = cache["len"] + tq
+        new_cache = {"k": ck, "v": cv, "len": new_len}
+        k_full = wlc(k_full, ("batch", "kv_seq", "kv_heads", None))
+        v_full = wlc(v_full, ("batch", "kv_seq", "kv_heads", None))
+        if window_decode:
+            # every live ring slot is valid once len >= window; before that,
+            # slots >= len are zeros — mask by min(len, window)
+            kvl = jnp.minimum(new_len, k_full.shape[1])
+            kvl = jnp.broadcast_to(kvl, (b,))
+            out = _run_attention(
+                q, k_full, v_full, cfg, softmax,
+                causal=False, sliding_window=None, q_offset=0,
+                kv_valid_len=kvl,
+            )
+            return out, new_cache, (k, v)
+        q_offset = cache["len"]
+        fresh_k, fresh_v = k, v
+        k, v = k_full, v_full
+        kv_valid_len = jnp.broadcast_to(new_len, (b,))
+    else:
+        fresh_k, fresh_v = k, v
+
+    out = _run_attention(
+        q, k, v, cfg, softmax,
+        causal=causal and xkv is None,
+        sliding_window=sliding_window,
+        q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
+    )
+    return out, new_cache, (fresh_k, fresh_v)
+
+
+def _run_attention(q, k, v, cfg: ModelConfig, softmax: SoftmaxConfig, **kw) -> jax.Array:
+    if cfg.attn_impl == "flash":
+        from repro.kernels.flash_star.ops import flash_star_op
+
+        fmt = None if softmax.kind == "exact" else softmax.fmt
+        ctx = flash_star_op(
+            q, k, v, fmt=fmt, causal=kw["causal"],
+            sliding_window=kw["sliding_window"], q_offset=kw["q_offset"],
+            kv_valid_len=kw["kv_valid_len"],
+            block_q=min(cfg.attn_block_size, 128),
+            block_k=min(cfg.attn_block_size, 128),
+        )
+    elif (cfg.attn_impl == "blocked" and k.shape[1] > cfg.attn_block_size
+          and q.shape[1] > 1):
+        # KV-block scanning is for long score rows.  For decode (tq == 1) it
+        # is pure overhead — and with an SP-sharded cache the per-block
+        # re-slicing forces XLA into involuntary resharding of the whole
+        # cache every layer (the §Perf decode finding); the direct einsum
+        # keeps the cache sharding intact and lets the partial softmax
+        # reduce with one small psum.
+        ctx = blocked_attention(
+            q, k, v, softmax=softmax, block_size=cfg.attn_block_size, **kw
+        )
+    else:
+        ctx = attention(q, k, v, softmax=softmax, **kw)
+    b, tq = ctx.shape[0], ctx.shape[1]
+    return ctx.reshape(b, tq, -1)
+
+
+def attention_out(p: Params, ctx: jax.Array, cfg: ModelConfig) -> jax.Array:
+    out = jnp.einsum("bth,hd->btd", ctx, p["wo"].astype(cdtype(cfg)))
+    return wlc(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def spec_mlp(cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = pdtype(cfg)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi": ParamSpec((d, f), ("embed", "mlp"), pd, "fan_in"),
+            "wg": ParamSpec((d, f), ("embed", "mlp"), pd, "fan_in"),
+            "wo": ParamSpec((f, d), ("mlp", "embed"), pd, "fan_in"),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp"), pd, "fan_in"),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), pd, "fan_in"),
+    }
+
+
+def mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(dt))
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = wlc(h, ("batch", "seq", "mlp"))
+    out = jnp.einsum("btf,fd->btd", h, p["wo"].astype(dt))
+    return wlc(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# MoE (granite-moe: EP over 32 experts; mixtral: TP over 8 experts)
+
+
+def spec_moe(cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    pd = pdtype(cfg)
+    return {
+        "router": ParamSpec((d, e), ("embed", None), pd, "fan_in"),
+        "wi": ParamSpec((e, d, f), ("expert", "embed", "mlp"), pd, "fan_in"),
+        "wg": ParamSpec((e, d, f), ("expert", "embed", "mlp"), pd, "fan_in"),
+        "wo": ParamSpec((e, f, d), ("expert", "mlp", "embed"), pd, "fan_in"),
+    }
+
+
+def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Grouped one-hot dispatch MoE (GShard-style, capacity-dropped).
+
+    The router softmax runs through the STAR engine when cfg.star_router —
+    the paper's point (softmax precision-insensitivity) applies to routing
+    distributions at least as well as to attention.
+    """
+    dt = cdtype(cfg)
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    tokens = b * t
+    groups = b  # one group per batch row keeps dispatch O(T^2/G) local
+    tg = tokens // groups
+    xg = x.reshape(groups, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dt)).astype(jnp.float32)
+    if cfg.star_router and cfg.softmax_kind != "exact":
+        probs = star_softmax(logits, cfg.softmax_format, mode=cfg.softmax_mode)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [g, t, k]
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    cap = max(1, int(cfg.capacity_factor * k * tg / e))
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [g, t, k, e]
+    flat = onehot.reshape(groups, tg * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(groups, tg, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)  # [g, t, k]
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch [g, t, e, cap] combine weights
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # [g,t,k,cap]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, pos_oh, gate_vals)
+
+    xin = jnp.einsum("gtec,gtd->egcd", dispatch, xg.astype(jnp.float32)).astype(dt)
+    xin = wlc(xin, ("expert", "batch", None, "embed"))
+    h = jnp.einsum("egcd,edf->egcf", xin, p["wi"].astype(dt))
+    g_ = jnp.einsum("egcd,edf->egcf", xin, p["wg"].astype(dt))
+    h = jax.nn.silu(g_) * h
+    h = wlc(h, ("expert", "batch", None, "mlp"))
+    out = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(dt))
+    out = wlc(out, ("expert", "batch", None, "embed"))
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(dt), out)
+    return wlc(y.reshape(b, t, d), ("batch", "seq", "embed"))
+
+
+def scan_blocks(body, carry, xs, use_scan: bool = True):
+    """lax.scan over stacked block params; unrolls under the dry-run cost
+    probe context (see core.scan_ctl) or when use_scan=False."""
+    from repro.core.scan_ctl import scan_or_unroll, unroll_scans_enabled
+
+    if use_scan and not unroll_scans_enabled():
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def fit_window_cache(k: jax.Array, v: jax.Array, seq_axis: int, wlen: int, seq_len: int):
+    """Trim prefill K/V to a ``wlen`` ring cache with slot = position % wlen.
+
+    Decode inserts at ``len % wlen``, so the kept window must be *rolled* so
+    token ``j`` sits at slot ``j % wlen`` — a plain "keep last wlen" layout
+    would be overwritten in the wrong order.
+    """
+    seq = k.shape[seq_axis]
+    assert seq == seq_len
+    if seq >= wlen:
+        sl = [slice(None)] * k.ndim
+        sl[seq_axis] = slice(seq - wlen, seq)
+        kk, vv = k[tuple(sl)], v[tuple(sl)]
+        shift = (seq_len - wlen) % wlen
+        kk = jnp.roll(kk, shift, axis=seq_axis)
+        vv = jnp.roll(vv, shift, axis=seq_axis)
+        return kk, vv
+    pad = [(0, 0)] * k.ndim
+    pad[seq_axis] = (0, wlen - seq)
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba2 / recurrentgemma)
+
+
+def spec_conv1d(cfg: ModelConfig, channels: int, width: int) -> Params:
+    return {"kernel": ParamSpec((width, channels), ("conv", "mlp"), pdtype(cfg), "fan_in")}
+
+
+def causal_conv1d(
+    p: Params, x: jax.Array, state: Optional[jax.Array] = None
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv.  x [B, T, C]; state [B, W-1, C] carries context
+    for decode.  Returns (y, new_state)."""
+    w = p["kernel"].astype(x.dtype)  # [W, C]
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(width - 1):, :]
+    y = sum(
+        xp[:, i : xp.shape[1] - (width - 1 - i), :] * w[i]
+        for i in range(width)
+    )
+    return y, new_state

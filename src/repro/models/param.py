@@ -1,0 +1,87 @@
+"""Declarative parameters: models declare shapes + logical axes; the runtime
+decides realization (materialize for tests, ShapeDtypeStruct for dry-runs,
+PartitionSpec for sharding).  This is what lets one model definition serve
+smoke tests on 1 CPU device and 512-chip dry-runs unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """A parameter declaration: shape, logical axes, dtype, initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else int(np.prod(spec.shape[:-1]))
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * spec.scale * 0.02).astype(spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, spec.shape) * spec.scale * 1e-2).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def materialize(specs: PyTree, key: jax.Array) -> PyTree:
+    """Turn a tree of ParamSpec into actual arrays (deterministic per-path)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_tree(specs: PyTree) -> PyTree:
+    """ShapeDtypeStruct stand-ins (no allocation) for dry-run lowering."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def count_params(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def axes_tree(specs: PyTree) -> PyTree:
+    """The logical-axes tree (same structure), for sharding rules."""
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def cast_tree(params: PyTree, dtype) -> PyTree:
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, params)

@@ -1,0 +1,22 @@
+"""Model registry: family -> implementation class."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.rglru import RecurrentGemmaLM
+from repro.models.ssm import MambaLM
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if fam == "ssm":
+        return MambaLM(cfg)
+    if fam == "hybrid":
+        return RecurrentGemmaLM(cfg)
+    if fam == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {fam!r}")

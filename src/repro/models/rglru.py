@@ -1,0 +1,316 @@
+"""RecurrentGemma (Griffin) hybrid: RG-LRU recurrent blocks + local attention.
+
+Pattern (cfg.block_pattern): ("recurrent", "recurrent", "attention") repeated;
+26 layers = 8 scanned periods of 3 + a 2-layer recurrent tail (DESIGN.md §5).
+The local-attention layers run through the STAR softmax engine; RG-LRU layers
+have no softmax (noted inapplicability).
+
+RG-LRU recurrence: h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t), with
+a_t = exp(c * r_t * -softplus(lam)), gates r, i = sigmoid(linear(x)).
+Train/prefill uses an associative scan (log-depth), decode a single step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.models.transformer import _stack_specs, cross_entropy
+
+Params = Dict[str, Any]
+_LRU_C = 8.0
+
+
+def spec_rglru_block(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    pd = L.pdtype(cfg)
+    return {
+        "ln": L.spec_rmsnorm(cfg),
+        "wx": ParamSpec((d, w), ("embed", "mlp"), pd, "fan_in"),
+        "wgate": ParamSpec((d, w), ("embed", "mlp"), pd, "fan_in"),
+        "conv": L.spec_conv1d(cfg, w, cfg.conv_width),
+        "wa": ParamSpec((w, w), ("embed", "mlp"), pd, "fan_in"),
+        "wi": ParamSpec((w, w), ("embed", "mlp"), pd, "fan_in"),
+        "lam": ParamSpec((w,), ("mlp",), pd, "ones"),
+        "wout": ParamSpec((w, d), ("mlp", "embed"), pd, "fan_in"),
+        "ln_mlp": L.spec_rmsnorm(cfg),
+        "mlp": L.spec_mlp(cfg),
+    }
+
+
+def spec_attn_block(cfg: ModelConfig) -> Params:
+    return {
+        "ln": L.spec_rmsnorm(cfg),
+        "attn": L.spec_attention(cfg),
+        "ln_mlp": L.spec_rmsnorm(cfg),
+        "mlp": L.spec_mlp(cfg),
+    }
+
+
+def rglru_scan(
+    x: jax.Array,  # [B, T, W] gated input (i_t * x_t already applied)
+    a: jax.Array,  # [B, T, W] decay in (0, 1)
+    h0: Optional[jax.Array],  # [B, W]
+) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    Returns (h_all [B,T,W], h_last [B,W])."""
+    b_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x
+    if h0 is not None:
+        # fold h0 into the first step
+        b_in = b_in.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    return b_s, b_s[:, -1]
+
+
+def recurrent_block(
+    p: Params,
+    h: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,  # {"conv": [B,W-1,w], "h": [B,w]}
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    dt = L.cdtype(cfg)
+    x_in = L.rmsnorm(p["ln"], h, cfg.norm_eps)
+    xb = jnp.einsum("btd,dw->btw", x_in, p["wx"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x_in, p["wgate"].astype(dt)))
+
+    conv_out, new_conv = L.causal_conv1d(
+        p["conv"], xb, None if cache is None else cache["conv"]
+    )
+    if cache is None and return_state:
+        xp = jnp.pad(xb, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+        new_conv = xp[:, -(cfg.conv_width - 1):, :]
+
+    xf = conv_out.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xf, p["wa"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xf, p["wi"].astype(jnp.float32)))
+    log_a = -_LRU_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = i * xf
+
+    h0 = None if cache is None else cache["h"].astype(jnp.float32)
+    hs, h_last = rglru_scan(gated, a, h0)
+    y = (hs.astype(dt) * gate)
+    y = wlc(y, ("batch", "seq", "mlp"))
+    out = jnp.einsum("btw,wd->btd", y, p["wout"].astype(dt))
+    out = wlc(out, ("batch", "seq", "embed"))
+    new_cache = None
+    if cache is not None or return_state:
+        new_cache = {"conv": new_conv, "h": h_last.astype(jnp.float32)}
+    res = h + out
+    hn = L.rmsnorm(p["ln_mlp"], res, cfg.norm_eps)
+    return res + L.mlp(p["mlp"], hn, cfg), new_cache
+
+
+def local_attn_block(
+    p: Params,
+    h: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,
+    cache_len: Optional[jax.Array] = None,
+    return_kv: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    a, new_cache, kv = L.attention_block(
+        p["attn"], L.rmsnorm(p["ln"], h, cfg.norm_eps), cfg,
+        causal=True, sliding_window=cfg.local_window,
+        cache=None if cache is None else {**cache, "len": cache_len},
+    )
+    res = h + L.attention_out(p["attn"], a, cfg)
+    hn = L.rmsnorm(p["ln_mlp"], res, cfg.norm_eps)
+    out = res + L.mlp(p["mlp"], hn, cfg)
+    if cache is not None:
+        return out, {"k": new_cache["k"], "v": new_cache["v"]}
+    if return_kv:
+        return out, {"k": kv[0], "v": kv[1]}
+    return out, None
+
+
+class RecurrentGemmaLM:
+    """Scan over (R, R, A) periods + unrolled tail."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+        period = len(cfg.block_pattern)
+        self.num_periods = cfg.num_layers // period
+        self.tail = cfg.num_layers - self.num_periods * period  # leading-tail blocks
+
+    def period_spec(self) -> Params:
+        cfg = self.cfg
+        out: Params = {}
+        for idx, kind in enumerate(cfg.block_pattern):
+            out[f"b{idx}"] = (
+                spec_rglru_block(cfg) if kind == "recurrent" else spec_attn_block(cfg)
+            )
+        return out
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        specs: Params = {
+            "embed": L.spec_embedding(cfg),
+            "periods": _stack_specs(self.period_spec(), self.num_periods),
+            "final_norm": L.spec_rmsnorm(cfg),
+            "unembed": L.spec_unembed(cfg),
+        }
+        for i in range(self.tail):
+            kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+            specs[f"tail{i}"] = (
+                spec_rglru_block(cfg) if kind == "recurrent" else spec_attn_block(cfg)
+            )
+        return specs
+
+    def _window_len(self, max_len: int) -> int:
+        return min(max_len, self.cfg.local_window)
+
+    def cache_spec(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        w = cfg.lru_width or cfg.d_model
+        t = self._window_len(max_len)
+        dt = jnp.dtype(cfg.compute_dtype)
+        per: Params = {}
+        for idx, kind in enumerate(cfg.block_pattern):
+            if kind == "recurrent":
+                per[f"b{idx}"] = {
+                    "conv": ParamSpec(
+                        (self.num_periods, batch, cfg.conv_width - 1, w),
+                        ("layers", "batch", None, "mlp"), dt, "zeros",
+                    ),
+                    "h": ParamSpec(
+                        (self.num_periods, batch, w),
+                        ("layers", "batch", "mlp"), jnp.float32, "zeros",
+                    ),
+                }
+            else:
+                kvs = (self.num_periods, batch, t, cfg.num_kv_heads, cfg.resolved_head_dim)
+                per[f"b{idx}"] = {
+                    "k": ParamSpec(kvs, ("layers", "batch", "kv_seq", "kv_heads", None), dt, "zeros"),
+                    "v": ParamSpec(kvs, ("layers", "batch", "kv_seq", "kv_heads", None), dt, "zeros"),
+                }
+        spec: Params = {"periods": per, "len": ParamSpec((), (), jnp.int32, "zeros")}
+        for i in range(self.tail):
+            kind = self.cfg.block_pattern[i % len(self.cfg.block_pattern)]
+            if kind == "recurrent":
+                spec[f"tail{i}"] = {
+                    "conv": ParamSpec((batch, cfg.conv_width - 1, w), ("batch", None, "mlp"), dt, "zeros"),
+                    "h": ParamSpec((batch, w), ("batch", "mlp"), jnp.float32, "zeros"),
+                }
+            else:
+                kvs = (batch, t, cfg.num_kv_heads, cfg.resolved_head_dim)
+                spec[f"tail{i}"] = {
+                    "k": ParamSpec(kvs, ("batch", "kv_seq", "kv_heads", None), dt, "zeros"),
+                    "v": ParamSpec(kvs, ("batch", "kv_seq", "kv_heads", None), dt, "zeros"),
+                }
+        return spec
+
+    def _apply_period(self, pp, h, cfg, caches=None, cache_len=None, return_state=False):
+        new_caches: Params = {}
+        for idx, kind in enumerate(cfg.block_pattern):
+            key = f"b{idx}"
+            c = None if caches is None else caches[key]
+            if kind == "recurrent":
+                h, nc = recurrent_block(pp[key], h, cfg, c, return_state=return_state)
+            else:
+                h, nc = local_attn_block(
+                    pp[key], h, cfg, c, cache_len=cache_len, return_kv=return_state
+                )
+            if nc is not None:
+                new_caches[key] = nc
+        return h, (new_caches if new_caches else None)
+
+    def _run(self, params, x, caches=None, cache_len=None, return_state=False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h, nc = self._apply_period(
+                xs["p"], carry, cfg,
+                None if caches is None else xs["c"],
+                cache_len=cache_len, return_state=return_state,
+            )
+            return h, nc
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs: Params = {"p": params["periods"]}
+        if caches is not None:
+            xs["c"] = caches["periods"]
+        h, new_period_caches = L.scan_blocks(body, x, xs)
+
+        new_tail: Params = {}
+        for i in range(self.tail):
+            kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+            c = None if caches is None else caches[f"tail{i}"]
+            if kind == "recurrent":
+                h, nc = recurrent_block(params[f"tail{i}"], h, cfg, c, return_state=return_state)
+            else:
+                h, nc = local_attn_block(
+                    params[f"tail{i}"], h, cfg, c, cache_len=cache_len, return_kv=return_state
+                )
+            if nc is not None:
+                new_tail[f"tail{i}"] = nc
+        return h, new_period_caches, new_tail
+
+    def forward(self, params: Params, tokens: jax.Array, **_) -> jax.Array:
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        h, _, _ = self._run(params, x)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return L.unembed(params["unembed"], h, cfg, params["embed"])
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return cross_entropy(self.forward(params, batch["tokens"]), batch["labels"])
+
+    def prefill(self, params: Params, tokens: jax.Array, max_len: int, **_):
+        cfg = self.cfg
+        b, t = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg)
+        h, per_caches, tail_caches = self._run(params, x, return_state=True)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h[:, -1:], cfg, params["embed"])
+
+        wlen = self._window_len(max_len)
+
+        def fit_kv(c):
+            if "k" not in c:
+                return c
+            k, v = c["k"], c["v"]
+            kk, vv = L.fit_window_cache(k, v, k.ndim - 3, wlen, t)
+            return {"k": kk, "v": vv}
+
+        cache: Params = {
+            "periods": {
+                key: fit_kv(val) if "k" in val else val
+                for key, val in (per_caches or {}).items()
+            },
+            "len": jnp.asarray(t, jnp.int32),
+        }
+        for key, val in tail_caches.items():
+            cache[key] = fit_kv(val) if "k" in val else val
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        # ring caches store absolute-position-rotated keys; len drives rope
+        caches = {"periods": cache["periods"]}
+        for i in range(self.tail):
+            caches[f"tail{i}"] = cache[f"tail{i}"]
+        h, new_per, new_tail = self._run(
+            params, x, caches=caches, cache_len=cache["len"]
+        )
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h, cfg, params["embed"])
+        new_cache: Params = {"periods": new_per, "len": cache["len"] + tokens.shape[1]}
+        new_cache.update(new_tail)
+        return logits, new_cache

@@ -1,0 +1,279 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Attention-free: the paper's softmax engine is inapplicable to the mixer
+(DESIGN.md §5) — this arch exercises the framework's substrate instead.
+The chunked SSD algorithm mirrors the blocked attention pipeline: intra-
+chunk quadratic part + inter-chunk recurrent state, scanned over chunks.
+
+Shapes: d_inner = expand*d_model, H = d_inner/headdim heads, state N,
+ngroups G = 1 (B/C shared across heads).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+from repro.models.transformer import _stack_specs, cross_entropy
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, heads, conv_dim
+
+
+def spec_mamba_block(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, heads, conv_dim = _dims(cfg)
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    pd = L.pdtype(cfg)
+    return {
+        "ln": L.spec_rmsnorm(cfg),
+        "in_proj": ParamSpec(
+            (d, 2 * d_inner + 2 * gn + heads), ("embed", "mlp"), pd, "fan_in"
+        ),
+        "conv": L.spec_conv1d(cfg, conv_dim, cfg.ssm_conv),
+        "A_log": ParamSpec((heads,), (None,), pd, "zeros"),
+        "D": ParamSpec((heads,), (None,), pd, "ones"),
+        "dt_bias": ParamSpec((heads,), (None,), pd, "zeros"),
+        "out_norm": ParamSpec((d_inner,), ("mlp",), pd, "ones"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed"), pd, "fan_in"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_inner, heads, _ = _dims(cfg)
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z, x, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * gn], axis=-1
+    )
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _ssd_chunk_scan(
+    x: jax.Array,  # [B, T, H, P] (pre-multiplied by dt)
+    a: jax.Array,  # [B, T, H] log-decay (negative)
+    bmat: jax.Array,  # [B, T, N]
+    cmat: jax.Array,  # [B, T, N]
+    h0: Optional[jax.Array],  # [B, H, N, P] initial state or None
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,T,H,P], final state [B,H,N,P])."""
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p).swapaxes(0, 1)  # [nc, B, Q, H, P]
+    ac = a.reshape(b, nc, chunk, h).swapaxes(0, 1)
+    bc_ = bmat.reshape(b, nc, chunk, n).swapaxes(0, 1)
+    cc_ = cmat.reshape(b, nc, chunk, n).swapaxes(0, 1)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))  # q >= k
+
+    def body(hprev, xs):
+        xq, aq, bq, cq = xs  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        xq = xq.astype(jnp.float32)
+        ca = jnp.cumsum(aq.astype(jnp.float32), axis=1)  # inclusive [B,Q,H]
+        last = ca[:, -1, :]  # [B,H]
+        scores = jnp.einsum("bqn,bkn->bqk", cq.astype(jnp.float32), bq.astype(jnp.float32))
+        decay = jnp.exp(ca[:, :, None, :] - ca[:, None, :, :])  # [B,Q,K,H]
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, decay, xq)
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", cq.astype(jnp.float32), hprev)
+        y_inter = y_inter * jnp.exp(ca)[..., None]
+        s_c = jnp.einsum("bkn,bkhp,bkh->bhnp", bq.astype(jnp.float32), xq,
+                         jnp.exp(last[:, None, :] - ca))
+        hnew = hprev * jnp.exp(last)[:, :, None, None] + s_c
+        return hnew, y_intra + y_inter
+
+    from repro.core.scan_ctl import scan_or_unroll
+    hfin, ys = scan_or_unroll(body, h0, (xc, ac, bc_, cc_))
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, h, p)[:, :t]
+    return y, hfin
+
+
+def mamba_mixer(
+    p: Params,
+    x_in: jax.Array,  # [B, T, D]
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,  # {"conv": [B,W-1,convdim], "ssm": [B,H,N,P]}
+    return_state: bool = False,  # prefill: chunk-scan but emit a cache
+) -> Tuple[jax.Array, Optional[Params]]:
+    dt_ = L.cdtype(cfg)
+    d_inner, heads, conv_dim = _dims(cfg)
+    pdim = cfg.ssm_headdim
+    zxbcdt = jnp.einsum("btd,de->bte", x_in, p["in_proj"].astype(dt_))
+    z, x, bmat, cmat, dtproj = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    conv_out, new_conv = L.causal_conv1d(
+        p["conv"], conv_in, None if cache is None else cache["conv"]
+    )
+    if cache is None and return_state:
+        new_conv = conv_in[:, -(cfg.ssm_conv - 1):, :]
+    conv_out = jax.nn.silu(conv_out)
+    x, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + bmat.shape[-1]], axis=-1)
+
+    b, t = x.shape[0], x.shape[1]
+    xh = x.reshape(b, t, heads, pdim)
+    dt = jax.nn.softplus(
+        dtproj.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [B,T,H]
+    a_decay = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt  # negative log-decay
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    # G=1: B/C shared across heads
+    bm = bmat[..., : cfg.ssm_state]
+    cm = cmat[..., : cfg.ssm_state]
+
+    if cache is None:
+        y, hfin = _ssd_chunk_scan(xdt, a_decay, bm, cm, None, cfg.ssm_chunk)
+        new_cache = (
+            {"conv": new_conv.astype(dt_), "ssm": hfin} if return_state else None
+        )
+    else:
+        # decode: exact recurrence, t is small (usually 1)
+        def step(h, xs):
+            xdt_t, a_t, b_t, c_t = xs
+            h = h * jnp.exp(a_t)[:, :, None, None] + jnp.einsum(
+                "bn,bhp->bhnp", b_t, xdt_t
+            )
+            y_t = jnp.einsum("bn,bhnp->bhp", c_t, h)
+            return h, y_t
+
+        hfin, ys = jax.lax.scan(
+            step,
+            cache["ssm"].astype(jnp.float32),
+            (xdt.swapaxes(0, 1), a_decay.swapaxes(0, 1),
+             bm.astype(jnp.float32).swapaxes(0, 1), cm.astype(jnp.float32).swapaxes(0, 1)),
+        )
+        y = ys.swapaxes(0, 1)
+        new_cache = {"conv": new_conv, "ssm": hfin.astype(jnp.float32)}
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, t, d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["out_norm"].astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt_))
+    return wlc(out, ("batch", "seq", "embed")), new_cache
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    def block_spec(self) -> Params:
+        return spec_mamba_block(self.cfg)
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        return {
+            "embed": L.spec_embedding(cfg),
+            "blocks": _stack_specs(self.block_spec(), cfg.num_layers),
+            "final_norm": L.spec_rmsnorm(cfg),
+            "unembed": L.spec_unembed(cfg),
+        }
+
+    def _run(self, params, x, caches=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            bp = xs["p"]
+            hin = L.rmsnorm(bp["ln"], carry, cfg.norm_eps)
+            out, new_c = mamba_mixer(bp, hin, cfg, None if caches is None else xs["c"])
+            return carry + out, new_c
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs: Params = {"p": params["blocks"]}
+        if caches is not None:
+            xs["c"] = caches
+        h, new_caches = L.scan_blocks(body, x, xs)
+        return h, new_caches
+
+    def forward(self, params: Params, tokens: jax.Array, **_) -> jax.Array:
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        h, _ = self._run(params, x)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return L.unembed(params["unembed"], h, cfg, params["embed"])
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return cross_entropy(self.forward(params, batch["tokens"]), batch["labels"])
+
+    # -- serving: constant-size state cache ----------------------------------
+
+    def cache_spec(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        d_inner, heads, conv_dim = _dims(cfg)
+        return {
+            "layers": {
+                "conv": ParamSpec(
+                    (cfg.num_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                    ("layers", "batch", None, "mlp"), jnp.dtype(cfg.compute_dtype), "zeros",
+                ),
+                "ssm": ParamSpec(
+                    (cfg.num_layers, batch, heads, cfg.ssm_state, cfg.ssm_headdim),
+                    ("layers", "batch", "heads", None, None), jnp.float32, "zeros",
+                ),
+            },
+            "len": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+
+    def prefill(self, params: Params, tokens: jax.Array, max_len: int, **_):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+
+        def body(carry, bp):
+            hin = L.rmsnorm(bp["ln"], carry, cfg.norm_eps)
+            out, new_c = mamba_mixer(bp, hin, cfg, None, return_state=True)
+            return carry + out, new_c
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, states = L.scan_blocks(body, x, params["blocks"])
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h[:, -1:], cfg, params["embed"])
+        cache = {
+            "layers": states,
+            "len": jnp.asarray(tokens.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+
+        def body(carry, xs):
+            bp = xs["p"]
+            hin = L.rmsnorm(bp["ln"], carry, cfg.norm_eps)
+            out, new_c = mamba_mixer(bp, hin, cfg, xs["c"])
+            return carry + out, new_c
+
+        h, new_states = L.scan_blocks(body, x, {"p": params["blocks"], "c": cache["layers"]})
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h, cfg, params["embed"])
+        return logits, {"layers": new_states, "len": cache["len"] + tokens.shape[1]}

@@ -1,0 +1,311 @@
+"""Decoder-only transformer LM: dense, MoE, and VLM variants.
+
+One definition serves granite-8b, qwen2-72b, deepseek-coder-33b,
+llama3-405b (dense), granite-moe / mixtral (MoE), and qwen2-vl (VLM
+backbone with stub patch embeddings + M-RoPE).
+
+Layers are scan-stacked (``cfg.scan_layers``) so XLA compiles ONE block and
+loops it — essential for the 512-device dry-runs — with per-block remat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+
+Params = Dict[str, Any]
+
+
+def _stack_specs(spec: Params, n: int) -> Params:
+    """Prepend a 'layers' axis to every ParamSpec in a block spec tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        spec,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    # -- parameters ---------------------------------------------------------
+
+    def block_spec(self) -> Params:
+        cfg = self.cfg
+        spec: Params = {
+            "ln1": L.spec_rmsnorm(cfg),
+            "attn": L.spec_attention(cfg),
+            "ln2": L.spec_rmsnorm(cfg),
+        }
+        if cfg.family == "moe":
+            spec["moe"] = L.spec_moe(cfg)
+        else:
+            spec["mlp"] = L.spec_mlp(cfg)
+        return spec
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        specs: Params = {
+            "embed": L.spec_embedding(cfg),
+            "blocks": _stack_specs(self.block_spec(), cfg.num_layers),
+            "final_norm": L.spec_rmsnorm(cfg),
+            "unembed": L.spec_unembed(cfg),
+        }
+        if cfg.family == "vlm":
+            specs["patch_proj"] = {
+                "kernel": ParamSpec(
+                    (cfg.frontend_dim or cfg.d_model, cfg.d_model),
+                    ("embed", None), jnp.dtype(cfg.param_dtype), "fan_in",
+                )
+            }
+        return specs
+
+    # -- block --------------------------------------------------------------
+
+    def _block(
+        self,
+        bp: Params,
+        h: jax.Array,
+        *,
+        positions: Optional[jax.Array],
+        cache: Optional[Params],
+        kv_valid_len: Optional[jax.Array],
+    ) -> Tuple[jax.Array, Optional[Params], Tuple[jax.Array, jax.Array]]:
+        cfg = self.cfg
+        a, new_cache, kv = L.attention_block(
+            bp["attn"], L.rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg,
+            causal=True, positions=positions,
+            sliding_window=cfg.sliding_window, cache=cache,
+            kv_valid_len=kv_valid_len,
+        )
+        h = h + L.attention_out(bp["attn"], a, cfg)
+        hn = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+        if cfg.family == "moe":
+            h = h + L.moe(bp["moe"], hn, cfg)
+        else:
+            h = h + L.mlp(bp["mlp"], hn, cfg)
+        return h, new_cache, kv
+
+    def _run_blocks(
+        self,
+        params: Params,
+        h: jax.Array,
+        *,
+        positions: Optional[jax.Array] = None,
+        caches: Optional[Params] = None,
+        kv_valid_len: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Optional[Params]]:
+        cfg = self.cfg
+
+        def body(carry, xs):
+            bp = xs["p"]
+            cache = xs.get("c")
+            out, new_cache, _ = self._block(
+                bp, carry, positions=positions, cache=cache,
+                kv_valid_len=kv_valid_len,
+            )
+            if cfg.seq_parallel_activations:
+                # shard the inter-block carry's seq dim over the model axis —
+                # the remat-saved residual per layer shrinks by the TP degree
+                out = wlc(out, ("batch", "act_seq", "embed"))
+            return out, new_cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        if cfg.scan_layers:
+            xs: Params = {"p": params["blocks"]}
+            if caches is not None:
+                xs["c"] = caches
+            h, new_caches = L.scan_blocks(body, h, xs)
+            return h, new_caches
+        # unrolled (debug path)
+        new_caches = []
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda x: x[i], params["blocks"])
+            xs = {"p": bp}
+            if caches is not None:
+                xs["c"] = jax.tree.map(lambda x: x[i], caches)
+            h, nc = body(h, xs)
+            new_caches.append(nc)
+        if caches is not None:
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        else:
+            new_caches = None
+        return h, new_caches
+
+    # -- embedding helpers ----------------------------------------------------
+
+    def _embed_inputs(
+        self, params: Params, tokens: jax.Array, patch_embeds: Optional[jax.Array]
+    ) -> Tuple[jax.Array, Optional[jax.Array], int]:
+        """Returns (x, positions, n_prefix).  VLM prepends projected patches
+        and builds M-RoPE (t, h, w) position ids; text uses 1-D positions."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        b = tokens.shape[0]
+        if cfg.family != "vlm" or patch_embeds is None:
+            return x, None, 0
+        dt = L.cdtype(cfg)
+        patches = jnp.einsum(
+            "bpd,dm->bpm", patch_embeds.astype(dt), params["patch_proj"]["kernel"].astype(dt)
+        )
+        n_patch = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+        # M-RoPE ids — patches: t=0, (h, w) on a stub grid; text: all equal,
+        # offset past the patch grid extent.
+        side = max(1, int(n_patch ** 0.5))
+        hh = (jnp.arange(n_patch) // side).astype(jnp.int32)
+        ww = (jnp.arange(n_patch) % side).astype(jnp.int32)
+        ppos = jnp.stack([jnp.zeros_like(hh), hh, ww], axis=-1)  # [P, 3]
+        t0 = side  # text starts after patch grid extent (qwen2-vl convention)
+        tpos1 = t0 + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        tpos = jnp.stack([tpos1, tpos1, tpos1], axis=-1)  # [T, 3]
+        pos = jnp.concatenate([ppos, tpos], axis=0)[None]  # [1, P+T, 3]
+        return x, jnp.broadcast_to(pos, (b,) + pos.shape[1:]), n_patch
+
+    # -- public API -----------------------------------------------------------
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        *,
+        patch_embeds: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Full-sequence causal forward -> logits [B, T(+P), V]."""
+        cfg = self.cfg
+        x, positions, _ = self._embed_inputs(params, tokens, patch_embeds)
+        h, _ = self._run_blocks(params, x, positions=positions)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return L.unembed(params["unembed"], h, cfg, params["embed"])
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Mean next-token CE.  batch: tokens [B,T], labels [B,T] (-1 = pad),
+        optional patch_embeds."""
+        logits = self.forward(
+            params, batch["tokens"], patch_embeds=batch.get("patch_embeds")
+        )
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:  # VLM prefix: no loss on patches
+            logits = logits[:, logits.shape[1] - labels.shape[1]:]
+        return cross_entropy(logits, labels)
+
+    # -- serving --------------------------------------------------------------
+
+    def cache_len(self, max_len: int) -> int:
+        if self.cfg.sliding_window is not None:
+            return min(max_len, self.cfg.sliding_window)
+        return max_len
+
+    def cache_spec(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        t = self.cache_len(max_len)
+        kv = (cfg.num_layers, batch, t, cfg.num_kv_heads, cfg.resolved_head_dim)
+        axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+        dt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "layers": {
+                "k": ParamSpec(kv, axes, dt, "zeros"),
+                "v": ParamSpec(kv, axes, dt, "zeros"),
+            },
+            "len": ParamSpec((), (), jnp.int32, "zeros"),
+            # rope position of the next token — differs from "len" for VLM
+            # (M-RoPE positions restart after the patch grid extent)
+            "pos": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+
+    def prefill(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        max_len: int,
+        *,
+        patch_embeds: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Params]:
+        """Process a prompt, return (last-position logits, primed cache)."""
+        cfg = self.cfg
+        b, t = tokens.shape
+        x, positions, n_prefix = self._embed_inputs(params, tokens, patch_embeds)
+
+        def body(carry, bp):
+            out, _, (k, v) = self._block(
+                bp, carry, positions=positions, cache=None, kv_valid_len=None
+            )
+            return out, {"k": k, "v": v}
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, kvs = L.scan_blocks(body, x, params["blocks"])
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h[:, -1:], cfg, params["embed"])
+
+        cache_t = self.cache_len(max_len)
+        seq = x.shape[1]
+        if cfg.sliding_window is None and seq > cache_t:
+            raise ValueError(
+                f"prefill length {seq} (incl. any patch prefix) exceeds cache "
+                f"capacity {cache_t}; pass a larger max_len"
+            )
+        k_init, v_init = L.fit_window_cache(kvs["k"], kvs["v"], 2, cache_t, seq)
+        if positions is not None:  # VLM: next M-RoPE temporal position
+            next_pos = positions[0, -1, 0].astype(jnp.int32) + 1
+        else:
+            next_pos = jnp.asarray(seq, jnp.int32)
+        cache = {
+            "layers": {"k": k_init, "v": v_init},
+            "len": jnp.asarray(seq, jnp.int32),
+            "pos": next_pos,
+        }
+        return logits, cache
+
+    def decode_step(
+        self, params: Params, cache: Params, tokens: jax.Array
+    ) -> Tuple[jax.Array, Params]:
+        """One token step.  tokens [B, 1] -> (logits [B, 1, V], new cache)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        b = tokens.shape[0]
+        # decode rope positions: the positional counter (== len except VLM)
+        pos = (cache.get("pos", cache["len"]) + jnp.arange(1, dtype=jnp.int32))[None]
+        pos = jnp.broadcast_to(pos, (b, 1))
+        if cfg.mrope_sections:
+            pos = jnp.stack([pos, pos, pos], axis=-1)
+
+        def body(carry, xs):
+            out, new_c, _ = self._block(
+                xs["p"], carry, positions=pos, cache={**xs["c"], "len": cache["len"]},
+                kv_valid_len=None,
+            )
+            return out, {"k": new_c["k"], "v": new_c["v"]}
+
+        h, new_layer_caches = L.scan_blocks(body, x, {"p": params["blocks"], "c": cache["layers"]})
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h, cfg, params["embed"])
+        new_cache = {
+            "layers": {"k": new_layer_caches["k"], "v": new_layer_caches["v"]},
+            "len": cache["len"] + 1,
+            "pos": cache.get("pos", cache["len"]) + 1,
+        }
+        return logits, new_cache
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over positions with label >= 0 (f32 reductions)."""
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+    safe = jnp.maximum(labels, 0)
+    picked = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

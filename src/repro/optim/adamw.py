@@ -1,0 +1,92 @@
+"""AdamW with fp32 moments (bf16-param-safe), built from scratch."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # fp32 moments by default; "bfloat16" halves optimizer-state HBM (the
+    # 405B-class memory lever — PaLM/T5X-style low-precision Adam)
+    moments_dtype: str = "float32"
+
+
+def opt_state_specs(param_specs: PyTree, cfg: AdamWConfig = AdamWConfig()) -> PyTree:
+    """ParamSpec tree for the optimizer moments (same sharding as params)."""
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def _moment(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, mdt, "zeros")
+
+    mk = lambda: jax.tree.map(_moment, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {"mu": mk(), "nu": mk()}
+
+
+def init_opt_state(params: PyTree, cfg: AdamWConfig = AdamWConfig()) -> PyTree:
+    mdt = jnp.dtype(cfg.moments_dtype)
+    z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+    return {"mu": z(), "nu": z()}
+
+
+def adamw_update(
+    grads: PyTree,
+    opt_state: PyTree,
+    params: PyTree,
+    *,
+    lr: jax.Array,
+    cfg: AdamWConfig,
+    step: jax.Array,  # 1-based
+) -> tuple:
+    """Returns (new_params, new_opt_state)."""
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * (g32 * g32)
+        mhat = mu32 / c1
+        vhat = nu32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mu32.astype(mdt), nu32.astype(mdt)
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    newp = jax.tree.unflatten(tree, [o[0] for o in out])
+    newmu = jax.tree.unflatten(tree, [o[1] for o in out])
+    newnu = jax.tree.unflatten(tree, [o[2] for o in out])
+    return newp, {"mu": newmu, "nu": newnu}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm

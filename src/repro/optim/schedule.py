@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(step.astype(jnp.float32), peak_lr)

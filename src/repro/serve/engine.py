@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + decode with STAR-softmax sampling.
+
+The final sampling softmax also runs through the STAR engine (temperature
+folded into the logits before quantization) — the paper's precision
+argument applies to the output distribution too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.star_softmax import star_softmax
+from repro.models.registry import build_model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    star_sampling: bool = True  # STAR softmax on the output distribution
+
+
+class ServeEngine:
+    def __init__(self, model_cfg: ModelConfig, params: PyTree, serve_cfg: ServeConfig = ServeConfig()):
+        self.cfg = model_cfg
+        self.params = params
+        self.serve_cfg = serve_cfg
+        self.model = build_model(model_cfg)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        t = self.serve_cfg.temperature
+        if t <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / t
+        if self.serve_cfg.star_sampling and self.cfg.softmax_kind != "exact":
+            probs = star_softmax(
+                scaled, self.cfg.softmax_format, mode=self.cfg.softmax_mode
+            )
+            return jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-20)), axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+    def generate(
+        self,
+        prompts: jax.Array,  # [B, T] token prompts
+        num_tokens: int,
+        *,
+        key: Optional[jax.Array] = None,
+        **frontend,  # patch_embeds / src_embeds stubs
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b, t = prompts.shape
+        max_len = self.serve_cfg.max_len
+        logits, cache = self.model.prefill(self.params, prompts, max_len, **frontend)
+        outs = []
+        tok = self._sample(logits[:, -1], key)[:, None]
+        outs.append(tok)
+        for i in range(num_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = self._sample(logits[:, -1], sub)[:, None]
+            outs.append(tok)
+        generated = jnp.concatenate(outs, axis=1)
+        return generated, {"cache_len": int(jax.device_get(cache["len"]))}

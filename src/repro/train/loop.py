@@ -1,0 +1,141 @@
+"""The training loop: checkpoint/restart, preemption, straggler watchdog.
+
+Runs identically on 1 CPU device (tests/examples) and on a production mesh
+(the launcher passes mesh + rules; params/opt-state get sharded, batches get
+placed with batch sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, make_batch
+from repro.distributed.fault import FailureInjector, PreemptionGuard, StragglerWatchdog
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    Rules,
+    param_shardings,
+    use_mesh_rules,
+)
+from repro.models.param import materialize
+from repro.models.registry import build_model
+from repro.train.state import init_state, state_specs
+from repro.train.step import TrainConfig, make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    num_steps: int = 20
+    batch: int = 8
+    seq_len: int = 64
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    keep_ckpts: int = 3
+    log_every: int = 5
+    seed: int = 0
+    straggler_threshold: float = 2.5
+
+
+def run_train(
+    model_cfg: ModelConfig,
+    train_cfg: TrainConfig = TrainConfig(),
+    loop_cfg: LoopConfig = LoopConfig(),
+    *,
+    mesh=None,
+    rules: Optional[Rules] = None,
+    data_cfg: DataConfig = DataConfig(),
+    failure_injector: Optional[FailureInjector] = None,
+    log_fn: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    """Train; auto-resume from loop_cfg.ckpt_dir if a checkpoint exists.
+
+    Returns {"state": final state, "history": metrics, "stragglers": [...]}.
+    """
+    model = build_model(model_cfg)
+    specs = model.param_specs()
+    sspecs = state_specs(specs, train_cfg.adamw)
+    rules = rules or DEFAULT_RULES
+
+    step_fn = make_train_step(model, train_cfg)
+    if mesh is not None:
+        shardings = param_shardings(sspecs, rules, mesh)
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+    else:
+        shardings = None
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    # --- init or resume -----------------------------------------------------
+    start_step = 0
+    state = None
+    if loop_cfg.ckpt_dir and checkpointer.latest_step(loop_cfg.ckpt_dir) is not None:
+        template = jax.tree.map(
+            lambda s: np.zeros(s.shape, s.dtype),
+            sspecs,
+            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"),
+        )
+        state, start_step = checkpointer.restore(
+            loop_cfg.ckpt_dir, template, shardings=shardings
+        )
+        log_fn(f"[loop] resumed from step {start_step}")
+    if state is None:
+        with use_mesh_rules(mesh, rules):
+            state = init_state(specs, jax.random.PRNGKey(loop_cfg.seed), train_cfg.adamw)
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+
+    watchdog = StragglerWatchdog(threshold=loop_cfg.straggler_threshold)
+    history = []
+
+    ctx = use_mesh_rules(mesh, rules)
+    with ctx, PreemptionGuard() as guard:
+        step = start_step
+        while step < loop_cfg.num_steps:
+            if failure_injector is not None:
+                failure_injector.maybe_fail(step)
+            batch_np = make_batch(
+                model_cfg, batch=loop_cfg.batch, seq_len=loop_cfg.seq_len,
+                step=step, data_cfg=data_cfg,
+            )
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = jax.device_get(metrics)
+            dt = time.perf_counter() - t0
+            straggler = watchdog.observe(dt, step)
+            step += 1
+            history.append({"step": step, **{k: float(v) for k, v in metrics.items()}})
+            if step % loop_cfg.log_every == 0 or step == loop_cfg.num_steps:
+                log_fn(
+                    f"[loop] step {step} loss {history[-1]['loss']:.4f} "
+                    f"gnorm {history[-1]['grad_norm']:.3f} dt {dt*1e3:.0f}ms"
+                    + (" STRAGGLER" if straggler else "")
+                )
+            want_ckpt = loop_cfg.ckpt_dir and (
+                step % loop_cfg.ckpt_every == 0
+                or step == loop_cfg.num_steps
+                or guard.requested
+            )
+            if want_ckpt:
+                checkpointer.save(loop_cfg.ckpt_dir, step, state)
+                checkpointer.rotate(loop_cfg.ckpt_dir, loop_cfg.keep_ckpts)
+            if guard.requested:
+                log_fn(f"[loop] preemption requested; checkpointed at {step}")
+                break
+
+    return {
+        "state": state,
+        "history": history,
+        "stragglers": watchdog.events,
+        "final_step": step,
+    }

@@ -1,0 +1,37 @@
+"""TrainState: params + optimizer moments + step, with spec/sharding views."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec, materialize, shape_tree
+from repro.optim.adamw import AdamWConfig, init_opt_state, opt_state_specs
+
+PyTree = Any
+
+
+def state_specs(param_specs: PyTree, adamw: AdamWConfig = AdamWConfig()) -> PyTree:
+    """ParamSpec tree for the full train state."""
+    return {
+        "params": param_specs,
+        "opt": opt_state_specs(param_specs, adamw),
+        "step": ParamSpec((), (), jnp.int32, "zeros"),
+    }
+
+
+def init_state(param_specs: PyTree, key: jax.Array,
+               adamw: AdamWConfig = AdamWConfig()) -> PyTree:
+    params = materialize(param_specs, key)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, adamw),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_shapes(param_specs: PyTree, adamw: AdamWConfig = AdamWConfig()) -> PyTree:
+    return shape_tree(state_specs(param_specs, adamw))

@@ -1,0 +1,91 @@
+"""Train / eval step factories: grad accumulation, clipping, AdamW, sharded.
+
+``make_train_step`` returns a pure function suitable both for direct jit on
+one device and for pjit-with-shardings on the production mesh (the dry-run
+lowers exactly this function).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_update, clip_by_global_norm
+from repro.optim import schedule as schedule_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | constant
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def make_train_step(model, train_cfg: TrainConfig) -> Callable:
+    sched = {
+        "cosine": schedule_lib.cosine_with_warmup,
+        "constant": schedule_lib.constant,
+    }[train_cfg.schedule]
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if train_cfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mb = train_cfg.microbatches
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb_batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb_batch)
+            acc_loss, acc_grads = carry
+            return (
+                acc_loss + loss / mb,
+                jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / mb, acc_grads, grads),
+            ), None
+
+        from repro.core.scan_ctl import scan_or_unroll
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = scan_or_unroll(body, (jnp.zeros((), jnp.float32), zero), micro)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        return loss, grads
+
+    def train_step(state: PyTree, batch: Dict[str, jax.Array]):
+        loss, grads = grads_of(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        step1 = state["step"] + 1
+        lr = sched(
+            step1, peak_lr=train_cfg.peak_lr,
+            warmup=train_cfg.warmup_steps, total=train_cfg.total_steps,
+        )
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], state["params"],
+            lr=lr, cfg=train_cfg.adamw, step=step1,
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": step1}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(state: PyTree, batch: Dict[str, jax.Array]):
+        return model.loss(state["params"], batch)
+
+    return eval_step

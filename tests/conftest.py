@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single real CPU device.  The 512-device flag is ONLY for
+# launch/dryrun.py (its own subprocess) — never set it here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,98 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import (
+    EXACT_SOFTMAX,
+    STAR_SOFTMAX,
+    SoftmaxConfig,
+    attention,
+    blocked_attention,
+)
+from repro.core.fixedpoint import FORMAT_MRPC
+
+RNG = np.random.default_rng(42)
+
+
+def qkv(b=2, tq=33, tk=70, hq=8, hkv=2, d=32):
+    q = jnp.asarray(RNG.normal(size=(b, tq, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, tk, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, tk, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("softmax", [EXACT_SOFTMAX, STAR_SOFTMAX])
+@pytest.mark.parametrize("block", [16, 32, 512])
+def test_blocked_equals_full(softmax, block):
+    q, k, v = qkv()
+    full = attention(q, k, v, softmax=softmax, causal=True, q_offset=37)
+    blk = blocked_attention(
+        q, k, v, softmax=softmax, causal=True, q_offset=37, block_size=block
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blk), atol=3e-6)
+
+
+def test_gqa_mqa_shapes():
+    for hq, hkv in [(8, 8), (8, 2), (4, 1)]:
+        q, k, v = qkv(hq=hq, hkv=hkv)
+        out = attention(q, k, v, softmax=STAR_SOFTMAX, causal=True, q_offset=37)
+        assert out.shape == q.shape
+
+
+def test_sliding_window_and_ragged():
+    q, k, v = qkv()
+    kvl = jnp.asarray([50, 70])
+    a = attention(q, k, v, softmax=STAR_SOFTMAX, causal=True, q_offset=37,
+                  sliding_window=24, kv_valid_len=kvl)
+    b = blocked_attention(q, k, v, softmax=STAR_SOFTMAX, causal=True, q_offset=37,
+                          sliding_window=24, kv_valid_len=kvl, block_size=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-6)
+
+
+def test_sliding_window_masks_far_context():
+    """With window w, positions further than w back must not influence out."""
+    q, k, v = qkv(tq=1, tk=64)
+    a1 = attention(q, k, v, softmax=EXACT_SOFTMAX, causal=True, q_offset=63,
+                   sliding_window=8)
+    k2 = k.at[:, :50].set(RNG.normal(size=(2, 50, 2, 32)))  # outside window
+    a2 = attention(q, k2, v, softmax=EXACT_SOFTMAX, causal=True, q_offset=63,
+                   sliding_window=8)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-6)
+
+
+def test_star_close_to_exact():
+    q, k, v = qkv()
+    a = attention(q, k, v, softmax=STAR_SOFTMAX, causal=True, q_offset=37)
+    e = attention(q, k, v, softmax=EXACT_SOFTMAX, causal=True, q_offset=37)
+    # attention output error ~ softmax quantization error x |V|
+    assert float(jnp.max(jnp.abs(a - e))) < 0.3
+    # 9-bit tighter than 8-bit
+    a9 = attention(q, k, v, softmax=SoftmaxConfig(kind="star", fmt=FORMAT_MRPC),
+                   causal=True, q_offset=37)
+    assert float(jnp.mean(jnp.abs(a9 - e))) <= float(jnp.mean(jnp.abs(a - e))) + 1e-6
+
+
+def test_decode_step_shape():
+    q, k, v = qkv(tq=1, tk=80)
+    out = attention(q, k, v, softmax=STAR_SOFTMAX, causal=True, q_offset=79)
+    assert out.shape == (2, 1, 8, 32)
+
+
+def test_ste_attention_grads():
+    q, k, v = qkv(b=1, tq=16, tk=16)
+    cfg = SoftmaxConfig(kind="star_ste")
+    g = jax.grad(lambda q: jnp.sum(attention(q, k, v, softmax=cfg, causal=True) ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.linalg.norm(g)) > 0
+
+
+def test_unroll_context_parity():
+    from repro.core.scan_ctl import unroll_scans
+
+    q, k, v = qkv()
+    a = blocked_attention(q, k, v, softmax=STAR_SOFTMAX, causal=True,
+                          q_offset=37, block_size=16)
+    with unroll_scans():
+        b = blocked_attention(q, k, v, softmax=STAR_SOFTMAX, causal=True,
+                              q_offset=37, block_size=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

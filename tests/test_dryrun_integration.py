@@ -1,0 +1,29 @@
+"""End-to-end dry-run regression: one real cell through the 512-device
+launch path in a subprocess (the cheapest cell: mamba2 decode)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_dryrun_cell_end_to_end():
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env.pop("XLA_FLAGS", None)  # dryrun sets its own
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "mamba2_130m", "--shape", "decode_32k",
+             "--mesh", "single", "--out", d, "--no-probes"],
+            capture_output=True, text=True, env=env, timeout=900,
+        )
+        assert r.returncode == 0, r.stderr[-3000:]
+        rec = json.load(open(os.path.join(d, "mamba2_130m_decode_32k_single.json")))
+        assert rec["ok"] and rec["chips"] == 256
+        assert rec["flops_per_dev"] > 0 and rec["bytes_per_dev"] > 0
+        assert rec["dominant"] in ("compute", "memory", "collective")
+        assert rec["peak_bytes_per_dev"] < 16e9  # fits v5e HBM

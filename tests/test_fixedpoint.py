@@ -1,0 +1,116 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fixedpoint import (
+    DEFAULT_FORMAT,
+    FORMAT_CNEWS,
+    FORMAT_COLA,
+    FORMAT_MRPC,
+    GRID_SENTINEL,
+    FixedPointFormat,
+    dequantize,
+    grid_index,
+    quantize_index,
+    quantize_logits,
+    quantize_value,
+    quantize_value_ste,
+)
+
+
+def test_paper_formats():
+    assert FORMAT_CNEWS.total_bits == 8 and FORMAT_CNEWS.frac_bits == 2
+    assert FORMAT_MRPC.total_bits == 9 and FORMAT_MRPC.frac_bits == 3
+    assert FORMAT_COLA.total_bits == 7 and FORMAT_COLA.frac_bits == 2
+    assert DEFAULT_FORMAT == FORMAT_CNEWS
+
+
+def test_format_properties():
+    f = FixedPointFormat(6, 2)
+    assert f.num_levels == 256
+    assert f.scale == 4.0
+    assert f.min_value == -255 / 4
+    assert f.resolution == 0.25
+    assert "8" in f.short_name() or "6i.2f" in f.short_name()
+
+
+def test_format_validation():
+    with pytest.raises(ValueError):
+        FixedPointFormat(-1, 2)
+    with pytest.raises(ValueError):
+        FixedPointFormat(0, 0)
+    with pytest.raises(ValueError):
+        FixedPointFormat(12, 12)
+
+
+def test_quantize_index_basics():
+    f = FixedPointFormat(6, 2)
+    z = jnp.asarray([0.0, -0.25, -0.26, -63.75, -1000.0, 0.5])
+    k = quantize_index(z, f)
+    assert k.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(k), [0, 1, 1, 255, 255, 0])
+
+
+def test_quantize_nan_maps_to_deepest():
+    f = DEFAULT_FORMAT
+    k = quantize_index(jnp.asarray([jnp.nan]), f)
+    assert int(k[0]) == f.num_levels - 1
+    j = quantize_logits(jnp.asarray([jnp.nan]), f)
+    assert int(j[0]) == GRID_SENTINEL
+
+
+def test_roundtrip_error_bound():
+    f = FixedPointFormat(6, 3)
+    rng = np.random.default_rng(0)
+    z = -np.abs(rng.normal(size=1000) * 10)
+    zq = np.asarray(quantize_value(jnp.asarray(z), f))
+    in_range = z >= f.min_value
+    assert np.max(np.abs(zq[in_range] - z[in_range])) <= f.resolution / 2 + 1e-6
+
+
+def test_grid_index_matches_subtraction():
+    f = DEFAULT_FORMAT
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=256) * 6
+    j = quantize_logits(jnp.asarray(x), f)
+    m = jnp.max(j)
+    k = grid_index(j, m, f)
+    assert int(jnp.min(k)) == 0  # the max element matches level 0
+    assert k.shape == x.shape
+
+
+def test_ste_gradient():
+    f = DEFAULT_FORMAT
+    g = jax.grad(lambda z: jnp.sum(quantize_value_ste(z, f)))(
+        jnp.asarray([-1.0, -100.0, 0.5])
+    )
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 0.0, 0.0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    ib=st.integers(min_value=1, max_value=8),
+    fb=st.integers(min_value=0, max_value=4),
+    vals=st.lists(st.floats(min_value=-60, max_value=0, allow_nan=False), min_size=1, max_size=32),
+)
+def test_property_quantize_monotone(ib, fb, vals):
+    """Quantization preserves order: z1 <= z2 => k1 >= k2 (index counts depth)."""
+    f = FixedPointFormat(ib, fb)
+    z = jnp.asarray(sorted(vals), jnp.float32)
+    k = np.asarray(quantize_index(z, f), np.int32)
+    assert np.all(np.diff(k) <= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    fb=st.integers(min_value=0, max_value=4),
+    v=st.floats(min_value=-50, max_value=0, allow_nan=False),
+)
+def test_property_roundtrip_idempotent(fb, v):
+    f = FixedPointFormat(6, fb)
+    z = jnp.asarray([v], jnp.float32)
+    once = quantize_value(z, f)
+    twice = quantize_value(once, f)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice))

@@ -1,0 +1,43 @@
+"""The analytical hardware model must land inside the paper's envelope."""
+
+import pytest
+
+from repro.hwmodel.star_engine import fig3, system_efficiency, table1
+
+
+def test_table1_bands():
+    t = table1()
+    # paper: 0.06x area, 0.05x power vs CMOS baseline
+    assert t["ours_model"]["area"] == pytest.approx(0.06, abs=0.03)
+    assert t["ours_model"]["power"] == pytest.approx(0.05, abs=0.03)
+    # strictly better than Softermax on both axes
+    assert t["ours_model"]["area"] < t["softermax"]["area"]
+    assert t["ours_model"]["power"] < t["softermax"]["power"]
+    # paper: 0.20x / 0.44x vs Softermax
+    assert t["vs_softermax_model"]["area"] == pytest.approx(0.20, abs=0.08)
+    assert t["vs_softermax_model"]["power"] == pytest.approx(0.44, abs=0.12)
+
+
+def test_fig3_bands():
+    f = fig3()
+    assert f["star_model"] == pytest.approx(612.66, rel=0.25)
+    assert f["retransformer_model"] == pytest.approx(467.7, rel=0.25)
+    assert 1.0 < f["star_vs_retransformer_model"] < 1.7  # paper: 1.31
+
+
+def test_softmax_share_grows_with_seq():
+    shares = [
+        system_efficiency(s, softmax_on_rram=False, vector_pipeline=False)["softmax_share"]
+        for s in (128, 256, 512, 1024)
+    ]
+    assert shares == sorted(shares)
+
+
+def test_both_contributions_needed():
+    """Each of the paper's two ideas contributes; together they are best."""
+    base = system_efficiency(128, False, False)["gops_per_w"]
+    sm = system_efficiency(128, True, False)["gops_per_w"]
+    pipe = system_efficiency(128, False, True)["gops_per_w"]
+    both = system_efficiency(128, True, True)["gops_per_w"]
+    assert sm > base and pipe > base
+    assert both > sm and both > pipe

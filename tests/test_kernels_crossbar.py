@@ -1,0 +1,56 @@
+"""Kernel sweep: crossbar MatMul engine model vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.crossbar_matmul.ops import crossbar_matmul_op
+from repro.kernels.crossbar_matmul.ref import (
+    CrossbarSpec,
+    crossbar_matmul_ref,
+    exact_matmul_ref,
+)
+
+RNG = np.random.default_rng(5)
+
+
+@pytest.mark.parametrize("mkn", [(16, 128, 128), (7, 300, 190), (64, 256, 384), (1, 128, 64)])
+def test_kernel_bit_exact_vs_ref(mkn):
+    m, k, n = mkn
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)) * 0.05, jnp.float32)
+    ref = crossbar_matmul_ref(x, w)
+    out = crossbar_matmul_op(x, w, block_m=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_calibrated_adc_error_reasonable():
+    x = jnp.asarray(RNG.normal(size=(32, 256)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(256, 256)) * 0.05, jnp.float32)
+    out = crossbar_matmul_op(x, w)
+    exact = exact_matmul_ref(x, w)
+    rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.12  # 5-bit ADC, calibrated ranging
+
+
+def test_fullscale_ranging_much_worse():
+    x = jnp.asarray(RNG.normal(size=(16, 256)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(256, 128)) * 0.05, jnp.float32)
+    exact = exact_matmul_ref(x, w)
+    cal = crossbar_matmul_op(x, w, ranging="calibrated")
+    fs = crossbar_matmul_op(x, w, ranging="fullscale")
+    e_cal = float(jnp.linalg.norm(cal - exact))
+    e_fs = float(jnp.linalg.norm(fs - exact))
+    assert e_fs > 3 * e_cal  # worst-case ranging wastes the 5-bit ADC
+
+
+def test_more_adc_bits_less_error():
+    x = jnp.asarray(RNG.normal(size=(16, 256)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(256, 128)) * 0.05, jnp.float32)
+    exact = exact_matmul_ref(x, w)
+    errs = []
+    for bits in (3, 5, 7):
+        spec = CrossbarSpec(adc_bits=bits)
+        out = crossbar_matmul_ref(x, w, spec)
+        errs.append(float(jnp.linalg.norm(out - exact)))
+    assert errs[0] > errs[1] > errs[2]

@@ -1,0 +1,82 @@
+"""Kernel sweep: flash_star fused attention (interpret) vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fixedpoint import DEFAULT_FORMAT, FORMAT_COLA
+from repro.kernels.flash_star.ops import flash_star_op
+from repro.kernels.flash_star.ref import flash_star_blocked_ref, flash_star_ref
+
+RNG = np.random.default_rng(11)
+
+
+def qkv(b, tq, tk, hq, hkv, d, dtype=jnp.float32):
+    return (
+        jnp.asarray(RNG.normal(size=(b, tq, hq, d)), dtype),
+        jnp.asarray(RNG.normal(size=(b, tk, hkv, d)), dtype),
+        jnp.asarray(RNG.normal(size=(b, tk, hkv, d)), dtype),
+    )
+
+
+CASES = [
+    dict(b=2, tq=64, tk=64, hq=4, hkv=4, d=32, causal=True, fmt=DEFAULT_FORMAT),
+    dict(b=1, tq=33, tk=70, hq=8, hkv=2, d=16, causal=True, fmt=DEFAULT_FORMAT),
+    dict(b=2, tq=50, tk=50, hq=2, hkv=1, d=64, causal=False, fmt=FORMAT_COLA),
+    dict(b=1, tq=96, tk=96, hq=2, hkv=2, d=32, causal=True, fmt=None),  # exact
+    dict(b=2, tq=1, tk=80, hq=4, hkv=2, d=32, causal=True, fmt=DEFAULT_FORMAT),  # decode
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=lambda c: f"t{c['tq']}x{c['tk']}h{c['hq']}kv{c['hkv']}{'c' if c['causal'] else ''}{'x' if c['fmt'] is None else ''}")
+def test_kernel_vs_two_pass_ref(case):
+    q, k, v = qkv(case["b"], case["tq"], case["tk"], case["hq"], case["hkv"], case["d"])
+    off = case["tk"] - case["tq"] if case["causal"] else 0
+    kvl = jnp.full((case["b"],), case["tk"], jnp.int32).at[0].set(max(1, case["tk"] - 7))
+    out = flash_star_op(q, k, v, fmt=case["fmt"], causal=case["causal"],
+                        q_offset=off, kv_valid_len=kvl, block_q=32, block_k=32)
+    ref = flash_star_ref(q, k, v, fmt=case["fmt"], causal=case["causal"],
+                         q_offset=off, kv_valid_len=kvl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-6)
+
+
+def test_kernel_vs_blocked_ref():
+    q, k, v = qkv(2, 64, 64, 4, 2, 32)
+    out = flash_star_op(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = flash_star_blocked_ref(q, k, v, causal=True, block_size=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-6)
+
+
+def test_sliding_window():
+    q, k, v = qkv(2, 64, 64, 4, 2, 32)
+    out = flash_star_op(q, k, v, causal=True, sliding_window=24, block_q=16, block_k=16)
+    ref = flash_star_ref(q, k, v, causal=True, sliding_window=24)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=str)
+def test_dtypes(dtype):
+    q, k, v = qkv(1, 32, 32, 2, 2, 32, dtype)
+    out = flash_star_op(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = flash_star_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=2e-2
+    )
+
+
+def test_pv_int8_close_to_f32():
+    """Beyond-paper int8 P.V path: error bounded by the int8 mantissa grid."""
+    q, k, v = qkv(2, 64, 64, 4, 2, 32)
+    out8 = flash_star_op(q, k, v, causal=True, pv_int8=True, block_q=32, block_k=32)
+    ref = flash_star_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out8 - ref))) < 0.05
+
+
+def test_block_size_invariance():
+    q, k, v = qkv(1, 48, 48, 2, 2, 16)
+    outs = [
+        np.asarray(flash_star_op(q, k, v, causal=True, block_q=bq, block_k=bk))
+        for bq, bk in [(16, 16), (48, 16), (16, 48), (48, 48)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=5e-6)

@@ -1,0 +1,53 @@
+"""Kernel sweep: star_softmax Pallas (interpret) vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fixedpoint import FORMAT_CNEWS, FORMAT_COLA, FORMAT_MRPC
+from repro.kernels.star_softmax.ops import star_softmax_op
+from repro.kernels.star_softmax.ref import exact_softmax_ref, star_softmax_ref
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [(3, 128), (5, 7, 33), (2, 4, 257), (1, 512), (16, 64)]
+FMTS = [FORMAT_CNEWS, FORMAT_MRPC, FORMAT_COLA]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.short_name())
+def test_kernel_matches_ref(shape, fmt):
+    x = jnp.asarray(RNG.normal(size=shape) * 5, jnp.float32)
+    ref = star_softmax_ref(x, fmt)
+    out = star_softmax_op(x, fmt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_kernel_dtypes(dtype):
+    x = jnp.asarray(RNG.normal(size=(8, 96)) * 5, dtype)
+    ref = star_softmax_ref(x, FORMAT_CNEWS)
+    out = star_softmax_op(x, FORMAT_CNEWS)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-3)
+
+
+@pytest.mark.parametrize("kw", [
+    {"use_histogram": True},
+    {"use_mxu_lut": True},
+    {"use_histogram": True, "use_mxu_lut": True},
+    {"block_rows": 4},
+    {"block_rows": 16},
+])
+def test_kernel_variants(kw):
+    x = jnp.asarray(RNG.normal(size=(13, 130)) * 5, jnp.float32)
+    ref = star_softmax_ref(x, FORMAT_CNEWS)
+    out = star_softmax_op(x, FORMAT_CNEWS, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+def test_kernel_error_vs_exact_within_bound():
+    x = jnp.asarray(RNG.normal(size=(32, 256)) * 5, jnp.float32)
+    out = star_softmax_op(x, FORMAT_CNEWS)
+    exact = exact_softmax_ref(x)
+    assert float(jnp.max(jnp.abs(out - exact))) < np.exp(FORMAT_CNEWS.resolution) - 1
