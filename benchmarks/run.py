@@ -16,6 +16,7 @@ def main() -> None:
         accuracy_bitwidth,
         fig3_efficiency,
         kernel_bench,
+        serve_throughput,
         softmax_fraction,
         table1_area_power,
     )
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig3_efficiency (paper Fig 3)", fig3_efficiency.main),
         ("accuracy_bitwidth (paper §II precision)", accuracy_bitwidth.main),
         ("kernel_bench (kernels)", kernel_bench.main),
+        ("serve_throughput (continuous batching)", serve_throughput.main),
     ]
     failures = []
     for name, fn in suites:

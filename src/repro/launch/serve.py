@@ -1,7 +1,12 @@
-"""Serving launcher: batched generation with the STAR engine.
+"""Serving launcher: lockstep batch or continuous-batching generation.
 
+  # lockstep (one fixed batch, synchronized decode)
   PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
       --batch 4 --prompt-len 32 --gen 16
+
+  # continuous batching (slot pool, staggered mixed-length requests)
+  PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
+      --engine continuous --requests 8 --slots 4 --gen 16
 """
 
 from __future__ import annotations
@@ -11,41 +16,31 @@ import sys
 import time
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.8)
-    ap.add_argument("--max-len", type=int, default=None)
-    args = ap.parse_args()
-
-    import jax
+def _frontend_kwargs(cfg, rng, batch):
     import jax.numpy as jnp
-    import numpy as np
 
-    from repro.configs import get_config, get_smoke_config
-    from repro.models.registry import build_model
-    from repro.models.param import materialize
-    from repro.serve.engine import ServeConfig, ServeEngine
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = build_model(cfg)
-    params = materialize(model.param_specs(), jax.random.PRNGKey(0))
-    max_len = args.max_len or (args.prompt_len + args.gen + cfg.num_patches + 8)
-    eng = ServeEngine(cfg, params, ServeConfig(max_len=max_len, temperature=args.temperature))
-
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
     kw = {}
     if cfg.family == "vlm":
         kw["patch_embeds"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.num_patches, cfg.frontend_dim)), jnp.float32)
+            rng.standard_normal((batch, cfg.num_patches, cfg.frontend_dim)), jnp.float32)
     if cfg.family == "encdec":
         kw["src_embeds"] = jnp.asarray(
-            rng.standard_normal((args.batch, 64, cfg.frontend_dim or cfg.d_model)), jnp.float32)
+            rng.standard_normal((batch, 64, cfg.frontend_dim or cfg.d_model)), jnp.float32)
+    return kw
+
+
+def run_lockstep(args, cfg, params) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    max_len = args.max_len or (args.prompt_len + args.gen + cfg.num_patches + 8)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=max_len, temperature=args.temperature))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    kw = _frontend_kwargs(cfg, rng, args.batch)
 
     t0 = time.perf_counter()
     toks, info = eng.generate(prompts, args.gen, **kw)
@@ -54,6 +49,69 @@ def main() -> int:
           f"({args.batch * args.gen / dt:.1f} tok/s) cache_len={info['cache_len']}")
     print("sample:", np.asarray(toks[0])[:16].tolist())
     return 0
+
+
+def run_continuous(args, cfg, params) -> int:
+    import numpy as np
+
+    from repro.serve.engine import ContinuousBatchingEngine, ContinuousConfig
+
+    max_len = args.max_len or (args.prompt_len + args.gen + cfg.num_patches + 8)
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=args.slots, max_len=max_len,
+                         temperature=args.temperature),
+    )
+    rng = np.random.default_rng(0)
+    total = 0
+    for i in range(args.requests):
+        # mixed-length traffic: vary prompt and generation budgets
+        plen = max(1, int(rng.integers(args.prompt_len // 2, args.prompt_len + 1)))
+        gen = max(1, int(rng.integers(args.gen // 2, args.gen + 1)))
+        kw = {}
+        if cfg.family == "vlm":  # per-request stub patch embeddings
+            kw["patch_embeds"] = rng.standard_normal(
+                (1, cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+        eng.submit(rng.integers(0, cfg.vocab_size, (plen,)), gen, **kw)
+        total += gen
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    print(f"served {args.requests} requests / {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s) over {eng.ticks} decode ticks "
+          f"({args.slots} slots)")
+    first = done[min(done)]
+    print("sample:", first[:16])
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("lockstep", "continuous"), default="lockstep")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8, help="continuous: request count")
+    ap.add_argument("--slots", type=int, default=4, help="continuous: KV slot pool size")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--max-len", type=int, default=None)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models.param import materialize
+    from repro.models.registry import build_model
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = materialize(model.param_specs(), jax.random.PRNGKey(0))
+    if args.engine == "continuous":
+        return run_continuous(args, cfg, params)
+    return run_lockstep(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -216,6 +216,14 @@ def attention_block(
     if use_rope and xkv is None:
         if positions is None:
             base = cache["len"] if cache is not None else 0
+            if jnp.ndim(base) == 1:
+                # the pool's rope counters live in the model-level cache
+                # ("pos", which diverges from "len" for VLM); this layer
+                # cannot reconstruct them from "len" alone
+                raise ValueError(
+                    "per-slot caches require explicit positions "
+                    "(decode_step builds them from the pool's 'pos' counters)"
+                )
             positions = base + jnp.arange(tq)[None, :].astype(jnp.int32)
             positions = jnp.broadcast_to(positions, (b, tq))
         if cfg.mrope_sections and positions.ndim == 3:
@@ -238,10 +246,26 @@ def attention_block(
     q_offset: jax.Array | int = 0
     new_cache = None
     if cache is not None:
-        # ring-buffer for sliding windows, append otherwise
-        if sliding_window is not None and cache["k"].shape[1] <= sliding_window:
+        cache_t = cache["k"].shape[1]
+        # Per-slot serving pool: cache["len"] is a [B] vector — every slot
+        # decodes at its own depth, so the write index and the valid-length
+        # mask are per batch row (continuous batching, DESIGN.md §6).
+        per_slot = jnp.ndim(cache["len"]) == 1
+        ring = sliding_window is not None and cache_t <= sliding_window
+        if per_slot:
+            assert tq == 1, "per-slot cache only supports 1-token decode"
+            idx = cache["len"] % cache_t if ring else cache["len"]
+            # blend-style write: dynamic_update_slice cannot take a
+            # per-batch index, the one-hot hit mask can
+            hit = (jnp.arange(cache_t)[None, :] == idx[:, None])[..., None, None]
+            ck = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+            k_full, v_full = ck, cv
+            window_decode = ring
+        elif ring:
+            # ring-buffer for sliding windows, append otherwise
             assert tq == 1, "ring-buffer window cache only supports 1-token decode"
-            idx = cache["len"] % cache["k"].shape[1]
+            idx = cache["len"] % cache_t
             ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
             # positions of ring slots are implicit; use unrotated ring order
@@ -251,7 +275,7 @@ def attention_block(
         elif cfg.kv_update == "onehot" and tq == 1:
             # sharding-friendly append: elementwise blend, no cross-shard
             # dynamic update (see ModelConfig.kv_update)
-            hit = (jnp.arange(cache["k"].shape[1]) == cache["len"])[None, :, None, None]
+            hit = (jnp.arange(cache_t) == cache["len"])[None, :, None, None]
             ck = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
             cv = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
             k_full, v_full = ck, cv
@@ -265,10 +289,12 @@ def attention_block(
         new_cache = {"k": ck, "v": cv, "len": new_len}
         k_full = wlc(k_full, ("batch", "kv_seq", "kv_heads", None))
         v_full = wlc(v_full, ("batch", "kv_seq", "kv_heads", None))
-        if window_decode:
-            # every live ring slot is valid once len >= window; before that,
-            # slots >= len are zeros — mask by min(len, window)
-            kvl = jnp.minimum(new_len, k_full.shape[1])
+        if window_decode or per_slot:
+            # Single-token decode: the causal constraint is exactly "attend
+            # to the first new_len cache rows", so a (per-batch) valid-length
+            # mask subsumes it.  Ring caches additionally clamp to the window
+            # capacity — slots >= len are zeros until the ring wraps.
+            kvl = jnp.minimum(new_len, cache_t) if window_decode else new_len
             kvl = jnp.broadcast_to(kvl, (b,))
             out = _run_attention(
                 q, k_full, v_full, cfg, softmax,

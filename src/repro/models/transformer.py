@@ -224,6 +224,67 @@ class DecoderLM:
             "pos": ParamSpec((), (), jnp.int32, "zeros"),
         }
 
+    # -- slot-pool serving (continuous batching) ------------------------------
+    #
+    # A slot pool is an ordinary decode cache whose "len"/"pos" entries are
+    # [num_slots] vectors instead of scalars: each batch row ("slot") decodes
+    # at its own depth.  ``decode_step`` handles both forms transparently
+    # (see layers.attention_block's per-slot path); the helpers below manage
+    # slot lifecycle for repro.serve.  DESIGN.md §6 documents the dataflow.
+
+    def init_pool_cache(self, num_slots: int, max_len: int) -> Params:
+        """Zeroed slot-pool cache: KV [L, S, T, Hkv, D], per-slot len/pos."""
+        cfg = self.cfg
+        t = self.cache_len(max_len)
+        kv = (cfg.num_layers, num_slots, t, cfg.num_kv_heads, cfg.resolved_head_dim)
+        dt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "layers": {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)},
+            "len": jnp.zeros((num_slots,), jnp.int32),
+            "pos": jnp.zeros((num_slots,), jnp.int32),
+        }
+
+    def write_slot(self, pool: Params, cache: Params, slot: int) -> Params:
+        """Insert a single-request prefill cache (batch 1) into pool ``slot``.
+
+        The prefill must have used the pool's ``max_len`` so the cache seq
+        dims line up; the freshly admitted request starts decoding at its
+        own length on the next pool tick.
+        """
+        k1 = cache["layers"]["k"]
+        pk = pool["layers"]["k"]
+        if k1.shape[1] != 1:
+            raise ValueError(f"write_slot expects a batch-1 prefill cache, got {k1.shape}")
+        if k1.shape[2] != pk.shape[2]:
+            raise ValueError(
+                f"prefill cache length {k1.shape[2]} != pool length {pk.shape[2]}; "
+                "prefill with the pool's max_len"
+            )
+        return {
+            "layers": {
+                "k": pk.at[:, slot].set(k1[:, 0].astype(pk.dtype)),
+                "v": pool["layers"]["v"].at[:, slot].set(
+                    cache["layers"]["v"][:, 0].astype(pk.dtype)
+                ),
+            },
+            "len": pool["len"].at[slot].set(cache["len"].astype(jnp.int32)),
+            "pos": pool["pos"].at[slot].set(cache["pos"].astype(jnp.int32)),
+        }
+
+    def reset_slot(self, pool: Params, slot: int) -> Params:
+        """Retire ``slot``: zero its counters so its stale rows are masked.
+
+        Note the counters regrow while the slot sits free — ``decode_step``
+        advances the whole ``len`` vector every tick — so a free slot
+        accumulates masked garbage that the next admission overwrites
+        wholesale.  ``len == 0`` is NOT a free-slot predicate; the
+        scheduler owns slot occupancy."""
+        return {
+            "layers": pool["layers"],
+            "len": pool["len"].at[slot].set(0),
+            "pos": pool["pos"].at[slot].set(0),
+        }
+
     def prefill(
         self,
         params: Params,
@@ -276,8 +337,12 @@ class DecoderLM:
         x = L.embed(params["embed"], tokens, cfg)
         b = tokens.shape[0]
         # decode rope positions: the positional counter (== len except VLM)
-        pos = (cache.get("pos", cache["len"]) + jnp.arange(1, dtype=jnp.int32))[None]
-        pos = jnp.broadcast_to(pos, (b, 1))
+        pos0 = cache.get("pos", cache["len"])
+        if jnp.ndim(pos0) == 1:  # per-slot pool cache: [B] counters
+            pos = pos0.astype(jnp.int32)[:, None]
+        else:
+            pos = (pos0 + jnp.arange(1, dtype=jnp.int32))[None]
+            pos = jnp.broadcast_to(pos, (b, 1))
         if cfg.mrope_sections:
             pos = jnp.stack([pos, pos, pos], axis=-1)
 

@@ -1,21 +1,58 @@
-"""Batched serving engine: prefill + decode with STAR-softmax sampling.
+"""Serving engines: lockstep batch generation and continuous batching.
 
-The final sampling softmax also runs through the STAR engine (temperature
-folded into the logits before quantization) — the paper's precision
-argument applies to the output distribution too.
+Two engines share the model, the KV-cache machinery, and STAR-softmax
+sampling (temperature folded into the logits before quantization — the
+paper's precision argument applies to the output distribution too):
+
+* :class:`ServeEngine` — the lockstep baseline: one fixed batch prefills
+  together, decodes together, finishes together.  Simple, and the right
+  tool when every request has the same shape; pathological under
+  heterogeneous traffic, where the whole batch waits for its longest
+  member.
+
+* :class:`ContinuousBatchingEngine` — a slot-pool engine (the tentpole).
+  Requests are admitted into a fixed pool of KV-cache slots as they arrive
+  (``SlotScheduler`` handles the lifecycle: FIFO admission, backpressure
+  when the pool is full, immediate slot reuse on completion).  Every tick
+  runs **one** jitted ``decode_step`` across the whole pool; per-slot
+  ``len``/``pos`` vectors in the cache (see ``DecoderLM.init_pool_cache``
+  and the per-slot path in ``layers.attention_block``) let each slot attend
+  at its own depth, so a newly admitted 8-token prompt and a 400-token
+  veteran decode side by side in the same MXU pass.  This is the paper's
+  fine-grained pipeline argument lifted to the request level: throughput
+  comes from never letting a lane idle.
+
+Slot lifecycle (one ``step()`` tick)::
+
+    admit:   pending ──> free slot: prefill(batch=1) -> write_slot(pool)
+                          sample token 0 from the prefill logits
+    decode:  one jitted decode_step over all S slots  [S,1] -> [S,1,V]
+             sample token t per active slot
+    retire:  finished slots (budget / EOS) release immediately;
+             reset_slot zeroes the slot's counters (stale rows masked;
+             free-slot counters regrow with the pool-wide tick — the
+             scheduler, not len, is the source of truth for occupancy)
+
+Greedy continuous-batching output is bit-identical to sequential
+``ServeEngine.generate`` calls for the same prompts (tests/test_serve.py);
+with temperature, each request gets its own PRNG stream (folded from its
+uid), so sampled output is also independent of pool co-tenancy.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.star_softmax import star_softmax
 from repro.models.registry import build_model
+from repro.models.transformer import DecoderLM
+from repro.serve.scheduler import Request, Slot, SlotScheduler
 
 PyTree = Any
 
@@ -27,7 +64,30 @@ class ServeConfig:
     star_sampling: bool = True  # STAR softmax on the output distribution
 
 
+def sample_token(
+    logits: jax.Array,  # [..., V]
+    key: jax.Array,
+    cfg: ModelConfig,
+    serve_cfg: ServeConfig,
+) -> jax.Array:
+    """Greedy or temperature sampling, through the STAR engine when
+    configured (the quantized LUT softmax shapes the sampling distribution
+    exactly like it shapes attention rows)."""
+    t = serve_cfg.temperature
+    if t <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / t
+    if serve_cfg.star_sampling and cfg.softmax_kind != "exact":
+        probs = star_softmax(scaled, cfg.softmax_format, mode=cfg.softmax_mode)
+        return jax.random.categorical(
+            key, jnp.log(jnp.maximum(probs, 1e-20)), axis=-1
+        ).astype(jnp.int32)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
 class ServeEngine:
+    """Lockstep batch engine: one prefill, then synchronized decode."""
+
     def __init__(self, model_cfg: ModelConfig, params: PyTree, serve_cfg: ServeConfig = ServeConfig()):
         self.cfg = model_cfg
         self.params = params
@@ -36,16 +96,7 @@ class ServeEngine:
         self._decode = jax.jit(self.model.decode_step)
 
     def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
-        t = self.serve_cfg.temperature
-        if t <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        scaled = logits.astype(jnp.float32) / t
-        if self.serve_cfg.star_sampling and self.cfg.softmax_kind != "exact":
-            probs = star_softmax(
-                scaled, self.cfg.softmax_format, mode=self.cfg.softmax_mode
-            )
-            return jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-20)), axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        return sample_token(logits, key, self.cfg, self.serve_cfg)
 
     def generate(
         self,
@@ -69,3 +120,210 @@ class ServeEngine:
             outs.append(tok)
         generated = jnp.concatenate(outs, axis=1)
         return generated, {"cache_len": int(jax.device_get(cache["len"]))}
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+
+
+@dataclasses.dataclass
+class ContinuousConfig:
+    num_slots: int = 8  # KV-cache pool size (max concurrent requests)
+    max_len: int = 512  # per-slot cache capacity (prompt + generation)
+    temperature: float = 0.0
+    star_sampling: bool = True
+
+    def as_serve_config(self) -> ServeConfig:
+        return ServeConfig(self.max_len, self.temperature, self.star_sampling)
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One emitted token: streamed to ``on_token`` and returned by step()."""
+
+    uid: int
+    token: int
+    index: int  # 0-based position within the request's generation
+    finished: bool
+
+
+class ContinuousBatchingEngine:
+    """Slot-pool serving: admit, decode the whole pool per tick, retire.
+
+    Host-side control (the :class:`SlotScheduler`) decides *which* requests
+    occupy which slots; the device-side tick is a single jitted
+    ``decode_step`` over the ``[num_slots, 1]`` token matrix.  Free slots
+    decode garbage that is masked (their ``len`` counter is 0) and simply
+    discarded — the fixed shape is what keeps the step jit-stable.
+    """
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        params: PyTree,
+        cb_cfg: ContinuousConfig = ContinuousConfig(),
+        *,
+        base_key: Optional[jax.Array] = None,
+        on_token: Optional[Callable[[TokenEvent], None]] = None,
+    ):
+        self.cfg = model_cfg
+        self.params = params
+        self.cb = cb_cfg
+        self.model = build_model(model_cfg)
+        if not isinstance(self.model, DecoderLM):
+            raise ValueError(
+                "continuous batching needs the per-slot KV-cache pool, which "
+                f"only attention-family models implement (got {model_cfg.family!r})"
+            )
+        self.scheduler = SlotScheduler(cb_cfg.num_slots)
+        self.pool = self.model.init_pool_cache(cb_cfg.num_slots, cb_cfg.max_len)
+        # donate the pool everywhere it is threaded through: the tick, the
+        # admission write, and the retirement reset all update it in place
+        # instead of copying the whole [L, S, T, H, D] pool (self.pool is
+        # rebound to the result each call, so the old buffer is never live)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._write_slot = jax.jit(
+            self.model.write_slot, static_argnums=(2,), donate_argnums=(0,))
+        self._reset_slot = jax.jit(
+            self.model.reset_slot, static_argnums=(1,), donate_argnums=(0,))
+        self._serve_cfg = cb_cfg.as_serve_config()
+        self._base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
+        self._on_token = on_token
+        self._inputs = np.zeros((cb_cfg.num_slots, 1), np.int32)  # next token per slot
+        self._frontend: Dict[int, Dict[str, jax.Array]] = {}
+        self.ticks = 0  # decode ticks executed (for utilization accounting)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: Sequence[int] | np.ndarray,
+        max_new_tokens: int,
+        *,
+        eos_id: Optional[int] = None,
+        arrival_time: float = 0.0,
+        **frontend,
+    ) -> int:
+        """Queue a request (never blocks); returns its uid."""
+        if self.cfg.sliding_window is None:
+            # decode writes prompt + (max_new_tokens - 1) K/V rows (the last
+            # sampled token is never fed back); past capacity the per-slot
+            # write would silently drop rows, so reject up front
+            prefix = self.cfg.num_patches if (
+                self.cfg.family == "vlm" and "patch_embeds" in frontend) else 0
+            need = prefix + len(prompt) + max_new_tokens - 1
+            if need > self.cb.max_len:
+                raise ValueError(
+                    f"request needs {need} cache rows (prompt {len(prompt)} "
+                    f"+ prefix {prefix} + {max_new_tokens} new tokens) but "
+                    f"the pool was built with max_len={self.cb.max_len}"
+                )
+        uid = self.scheduler.submit(
+            prompt, max_new_tokens, eos_id=eos_id, arrival_time=arrival_time
+        )
+        if frontend:
+            self._frontend[uid] = {k: jnp.asarray(v) for k, v in frontend.items()}
+        return uid
+
+    # -- the tick -----------------------------------------------------------
+
+    def _request_key(self, req: Request, index: int) -> jax.Array:
+        # Per-request stream, independent of slot placement and co-tenants.
+        return jax.random.fold_in(jax.random.fold_in(self._base_key, req.uid), index)
+
+    def _emit(self, slot: Slot, token: int, finished: bool) -> TokenEvent:
+        req = slot.request
+        ev = TokenEvent(req.uid, token, len(slot.generated) - 1, finished)
+        if self._on_token is not None:
+            self._on_token(ev)
+        return ev
+
+    def _finish(self, slot: Slot) -> None:
+        req = self.scheduler.retire(slot)
+        self._frontend.pop(req.uid, None)
+        self.pool = self._reset_slot(self.pool, slot.index)
+
+    def step(self) -> List[TokenEvent]:
+        """One engine tick: admit + prefill new requests, then one jitted
+        decode across the pool.  Returns the tokens emitted this tick."""
+        events: List[TokenEvent] = []
+
+        # 1. admission: prefill pending requests into free slots.  Decode
+        #    state of already-active slots is untouched — they proceed on
+        #    the same tick below.
+        for slot in self.scheduler.admit():
+            req = slot.request
+            fe = self._frontend.get(req.uid, {})
+            logits, cache1 = self.model.prefill(
+                self.params, jnp.asarray(req.prompt)[None], self.cb.max_len, **fe
+            )
+            self.pool = self._write_slot(self.pool, cache1, slot.index)
+            tok = int(sample_token(
+                logits[0, -1], self._request_key(req, 0), self.cfg, self._serve_cfg
+            ))
+            finished = self.scheduler.record_token(slot, tok)
+            events.append(self._emit(slot, tok, finished))
+            self._inputs[slot.index, 0] = tok
+            if finished:
+                self._finish(slot)
+
+        # 2. one decode tick across the whole slot pool.
+        active = self.scheduler.active_slots
+        if active:
+            logits, self.pool = self._decode(
+                self.params, self.pool, jnp.asarray(self._inputs)
+            )
+            last = logits[:, -1]  # [S, V]
+            # one batched sampling program + one host sync for all slots
+            if self._serve_cfg.temperature <= 0.0:
+                sampled = np.asarray(jnp.argmax(last, axis=-1))
+                toks = {s.index: int(sampled[s.index]) for s in active}
+            else:
+                rows = jnp.asarray([s.index for s in active])
+                uids = jnp.asarray([s.request.uid for s in active])
+                steps = jnp.asarray([len(s.generated) for s in active])
+                keys = jax.vmap(lambda u, i: jax.random.fold_in(
+                    jax.random.fold_in(self._base_key, u), i))(uids, steps)
+                sampled = np.asarray(jax.vmap(
+                    lambda lg, k: sample_token(lg, k, self.cfg, self._serve_cfg)
+                )(last[rows], keys))
+                toks = {s.index: int(t) for s, t in zip(active, sampled)}
+            for slot in active:
+                tok = toks[slot.index]
+                finished = self.scheduler.record_token(slot, tok)
+                events.append(self._emit(slot, tok, finished))
+                self._inputs[slot.index, 0] = tok
+                if finished:
+                    self._finish(slot)
+            self.ticks += 1
+        return events
+
+    # -- draining -----------------------------------------------------------
+
+    def run(self, max_ticks: Optional[int] = None) -> Dict[int, List[int]]:
+        """Drive ticks until every submitted request has finished; returns
+        {uid: generated tokens}."""
+        n = 0
+        while not self.scheduler.done():
+            self.step()
+            n += 1
+            if max_ticks is not None and n >= max_ticks and not self.scheduler.done():
+                raise RuntimeError(f"engine did not drain within {max_ticks} ticks")
+        return dict(self.scheduler.finished)
+
+    def serve(
+        self,
+        prompts: Sequence[Sequence[int] | np.ndarray],
+        max_new_tokens: int | Sequence[int],
+        *,
+        eos_id: Optional[int] = None,
+    ) -> List[List[int]]:
+        """Convenience: submit all prompts, drain, return outputs in order."""
+        if isinstance(max_new_tokens, int):
+            max_new_tokens = [max_new_tokens] * len(prompts)
+        uids = [
+            self.submit(p, int(m), eos_id=eos_id)
+            for p, m in zip(prompts, max_new_tokens)
+        ]
+        done = self.run()
+        return [done[u] for u in uids]

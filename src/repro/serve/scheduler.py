@@ -1,0 +1,160 @@
+"""Slot scheduler for continuous batching.
+
+The serving pool is a fixed set of ``num_slots`` KV-cache rows.  Each slot
+walks a three-state lifecycle:
+
+    FREE ──admit──> ACTIVE ──finish──> FREE
+     ^                                  │
+     └──────────── (immediately reusable) ──────────────┘
+
+* **Submission** (`submit`) appends a :class:`Request` to a FIFO pending
+  queue.  The queue is unbounded — backpressure happens at *admission*, not
+  submission: requests wait in line until a slot frees up, so a full pool
+  never drops or reorders work.
+* **Admission** (`admit`) pops pending requests into FREE slots (FIFO; at
+  most one request per free slot per tick).  The engine prefills each
+  admitted request into its slot's cache row while decode keeps running for
+  the slots that were already ACTIVE — this is the continuous-batching
+  analogue of the paper's fine-grained pipeline: new work slides into the
+  engine between decode ticks instead of waiting for the whole batch to
+  drain.
+* **Eviction / completion** (`retire`): a slot finishes when its request has
+  produced ``max_new_tokens`` tokens or sampled ``eos_id``.  `retire` frees
+  the slot immediately; the engine zeroes the slot's length counter so the
+  stale KV rows are masked out (they are overwritten wholesale by the next
+  admission).
+
+The scheduler is pure host-side bookkeeping — it never touches jax arrays —
+so it is trivially reusable by any engine that exposes "prefill into row i"
+and "decode all rows" primitives.  See DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is a 1-D int token array; ``max_new_tokens`` bounds the
+    generation; ``eos_id`` (optional) stops it early.  ``arrival_time`` is
+    only used by benchmarks / traces — the scheduler itself is clockless and
+    admits in submission order.
+    """
+
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D array, got {self.prompt.shape}")
+        if self.max_new_tokens <= 0:
+            raise ValueError("max_new_tokens must be positive")
+
+
+@dataclasses.dataclass
+class Slot:
+    """One KV-cache row of the pool and the request currently bound to it."""
+
+    index: int
+    request: Optional[Request] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+    def bind(self, request: Request) -> None:
+        assert self.free, f"slot {self.index} is busy"
+        self.request = request
+        self.generated = []
+
+    def release(self) -> Request:
+        assert self.request is not None
+        req, self.request = self.request, None
+        return req
+
+
+class SlotScheduler:
+    """Admission + retirement over a fixed slot pool (host-side only)."""
+
+    def __init__(self, num_slots: int):
+        if num_slots <= 0:
+            raise ValueError("num_slots must be positive")
+        self.slots: List[Slot] = [Slot(i) for i in range(num_slots)]
+        self.pending: Deque[Request] = deque()
+        self.finished: Dict[int, List[int]] = {}
+        self._next_uid = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: Sequence[int] | np.ndarray,
+        max_new_tokens: int,
+        *,
+        eos_id: Optional[int] = None,
+        arrival_time: float = 0.0,
+    ) -> int:
+        """Queue a request; returns its uid.  Never blocks: a full pool only
+        delays *admission* (FIFO), not submission."""
+        uid = self._next_uid
+        self._next_uid += 1
+        self.pending.append(
+            Request(uid, np.asarray(prompt, np.int32), max_new_tokens,
+                    eos_id=eos_id, arrival_time=arrival_time)
+        )
+        return uid
+
+    # -- admission ----------------------------------------------------------
+
+    def free_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.free]
+
+    def admit(self) -> List[Slot]:
+        """Bind pending requests to free slots (FIFO).  Returns the slots
+        admitted this tick, for the engine to prefill."""
+        admitted: List[Slot] = []
+        for slot in self.slots:
+            if not self.pending:
+                break
+            if slot.free:
+                slot.bind(self.pending.popleft())
+                admitted.append(slot)
+        return admitted
+
+    # -- progress / completion ----------------------------------------------
+
+    def record_token(self, slot: Slot, token: int) -> bool:
+        """Append a sampled token to the slot; returns True if the request
+        just finished (budget exhausted or EOS sampled)."""
+        req = slot.request
+        assert req is not None
+        slot.generated.append(int(token))
+        if req.eos_id is not None and int(token) == req.eos_id:
+            return True
+        return len(slot.generated) >= req.max_new_tokens
+
+    def retire(self, slot: Slot) -> Request:
+        """Finish the slot's request and free the slot for immediate reuse."""
+        self.finished[slot.request.uid] = list(slot.generated)
+        return slot.release()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def active_slots(self) -> List[Slot]:
+        return [s for s in self.slots if not s.free]
+
+    def done(self) -> bool:
+        return not self.pending and all(s.free for s in self.slots)

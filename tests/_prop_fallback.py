@@ -1,0 +1,101 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property-test modules do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _prop_fallback import given, settings, st
+
+so tier-1 collection never depends on hypothesis, while the properties are
+still *exercised*: ``given`` expands each strategy into a fixed example
+sweep — the min/max boundary draw first, then seeded-random draws — and
+runs the test body once per example.  No shrinking, no adaptive search;
+install hypothesis (``pip install -e .[dev]``) for the real engine.
+
+Only the strategy surface the repo's tests use is implemented:
+``st.integers``, ``st.floats``, ``st.lists``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, List
+
+import numpy as np
+
+N_EXAMPLES = 25  # random draws per property, after the two boundary draws
+
+
+class _Strategy:
+    """A draw function parameterized by mode: 'min' | 'max' | random rng."""
+
+    def __init__(self, draw: Callable):
+        self._draw = draw
+
+    def example(self, mode, rng: np.random.Generator):
+        return self._draw(mode, rng)
+
+
+class st:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        def draw(mode, rng):
+            if mode == "min":
+                return int(min_value)
+            if mode == "max":
+                return int(max_value)
+            return int(rng.integers(min_value, max_value + 1))
+        return _Strategy(draw)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, allow_nan: bool = False,
+               **_ignored) -> _Strategy:
+        def draw(mode, rng):
+            if mode == "min":
+                return float(min_value)
+            if mode == "max":
+                return float(max_value)
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(mode, rng):
+            if mode == "min":
+                return [elements.example("min", rng) for _ in range(max(min_size, 1))]
+            if mode == "max":
+                return [elements.example("max", rng) for _ in range(max_size)]
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(mode, rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(**_kwargs):
+    """No-op decorator (max_examples/deadline are hypothesis knobs)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Run the test over boundary draws + N seeded-random example draws."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            rng = np.random.default_rng(0xC0DEB00C)
+            modes: List = ["min", "max"] + ["rand"] * N_EXAMPLES
+            for mode in modes:
+                kwargs = {name: s.example(mode, rng)
+                          for name, s in strategies.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified by deterministic example {kwargs!r}"
+                    ) from e
+        # pytest must see a zero-arg signature, not the wrapped one —
+        # otherwise the strategy names look like (missing) fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

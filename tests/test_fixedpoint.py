@@ -2,7 +2,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic example sweep instead
+    from _prop_fallback import given, settings, st
 
 from repro.core.fixedpoint import (
     DEFAULT_FORMAT,

@@ -1,0 +1,84 @@
+"""SlotScheduler unit tests: admission, backpressure, reuse, completion.
+
+Pure host-side — no jax arrays, no model."""
+
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import Request, SlotScheduler
+
+
+def submit_n(sched, n, gen=4):
+    return [sched.submit(np.arange(1, 4), gen) for _ in range(n)]
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(0, np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError):
+        Request(0, np.zeros((2, 2), np.int32), 4)
+    with pytest.raises(ValueError):
+        Request(0, np.arange(3), 0)
+    with pytest.raises(ValueError):
+        SlotScheduler(0)
+
+
+def test_fifo_admission_and_backpressure():
+    sched = SlotScheduler(2)
+    uids = submit_n(sched, 5)
+    admitted = sched.admit()
+    # pool of 2: only the first two requests get slots, rest wait in line
+    assert [s.request.uid for s in admitted] == uids[:2]
+    assert len(sched.pending) == 3
+    assert sched.free_slots() == []
+    # a second admit with a full pool is a no-op (backpressure, no drops)
+    assert sched.admit() == []
+    assert len(sched.pending) == 3
+
+
+def test_slot_reuse_after_retire():
+    sched = SlotScheduler(2)
+    uids = submit_n(sched, 4, gen=2)
+    (s0, s1) = sched.admit()
+    # finish slot 0's request -> slot is immediately reusable
+    sched.record_token(s0, 7)
+    assert sched.record_token(s0, 8) is True  # budget of 2 reached
+    sched.retire(s0)
+    assert sched.finished[uids[0]] == [7, 8]
+    admitted = sched.admit()
+    assert len(admitted) == 1
+    assert admitted[0].index == s0.index  # same physical slot, new request
+    assert admitted[0].request.uid == uids[2]
+    assert admitted[0].generated == []  # lifecycle state reset on bind
+
+
+def test_completion_by_eos():
+    sched = SlotScheduler(1)
+    uid = sched.submit(np.arange(5), 100, eos_id=9)
+    (slot,) = sched.admit()
+    assert sched.record_token(slot, 3) is False
+    assert sched.record_token(slot, 9) is True  # EOS beats the budget
+    sched.retire(slot)
+    assert sched.finished[uid] == [3, 9]
+    assert sched.done()
+
+
+def test_done_tracks_pending_and_active():
+    sched = SlotScheduler(1)
+    assert sched.done()
+    sched.submit(np.arange(3), 1)
+    assert not sched.done()  # pending
+    (slot,) = sched.admit()
+    assert not sched.done()  # active
+    sched.record_token(slot, 0)
+    sched.retire(slot)
+    assert sched.done()
+
+
+def test_admit_caps_at_free_slots():
+    sched = SlotScheduler(3)
+    submit_n(sched, 2)
+    admitted = sched.admit()
+    assert len(admitted) == 2
+    assert len(sched.free_slots()) == 1
+    assert len(sched.active_slots) == 2

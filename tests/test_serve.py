@@ -1,4 +1,4 @@
-"""Serving engine tests."""
+"""Serving engine tests: lockstep baseline + continuous batching parity."""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +8,12 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models.param import materialize
 from repro.models.registry import build_model
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (
+    ContinuousBatchingEngine,
+    ContinuousConfig,
+    ServeConfig,
+    ServeEngine,
+)
 
 KEY = jax.random.PRNGKey(0)
 RNG = np.random.default_rng(0)
@@ -19,6 +24,12 @@ def engine(arch="granite_8b", **kw):
     model = build_model(cfg)
     params = materialize(model.param_specs(), KEY)
     return cfg, ServeEngine(cfg, params, ServeConfig(**kw))
+
+
+def _model_params(arch="granite_8b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    return cfg, materialize(model.param_specs(), KEY)
 
 
 def test_greedy_deterministic():
@@ -45,3 +56,157 @@ def test_serve_moe_and_ssm():
         prompts = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
         toks, _ = eng.generate(prompts, 4)
         assert toks.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+
+
+MAX_LEN = 40
+
+
+@pytest.mark.parametrize("arch,lens", [
+    ("granite_8b", (5, 11, 8, 3)),          # dense, per-slot append path
+    ("mixtral_8x22b", (20, 11, 18, 3)),     # MoE + window=16 ring: prompts
+])                                          # longer than the window wrap it
+def test_continuous_greedy_parity_staggered(arch, lens):
+    """N staggered mixed-length greedy requests through the slot pool must
+    equal N sequential lockstep generate calls, token for token."""
+    cfg, params = _model_params(arch)
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    gens = [4, 2, 5, 3]
+
+    ref = ServeEngine(cfg, params, ServeConfig(max_len=MAX_LEN, temperature=0.0))
+    expected = [np.asarray(ref.generate(jnp.asarray(p)[None], g)[0])[0].tolist()
+                for p, g in zip(prompts, gens)]
+
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN))
+    # staggered arrivals: two up front, the rest land mid-decode
+    u0 = eng.submit(prompts[0], gens[0])
+    u1 = eng.submit(prompts[1], gens[1])
+    eng.step()
+    u2 = eng.submit(prompts[2], gens[2])
+    eng.step()
+    u3 = eng.submit(prompts[3], gens[3])
+    done = eng.run()
+    assert [done[u] for u in (u0, u1, u2, u3)] == expected
+
+
+def test_continuous_streaming_events_and_slot_reuse():
+    cfg, params = _model_params()
+    events = []
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=1, max_len=MAX_LEN),
+        on_token=events.append)
+    prompts = [RNG.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+               for _ in range(3)]
+    uids = [eng.submit(p, 2) for p in prompts]
+    done = eng.run()
+    # one slot serves three requests back to back
+    assert sorted(done) == sorted(uids)
+    assert all(len(v) == 2 for v in done.values())
+    # streamed events reconstruct the outputs, in order, with finish flags
+    for uid in uids:
+        toks = [e.token for e in events if e.uid == uid]
+        idxs = [e.index for e in events if e.uid == uid]
+        fins = [e.finished for e in events if e.uid == uid]
+        assert toks == done[uid]
+        assert idxs == [0, 1]
+        assert fins == [False, True]
+
+
+def test_continuous_eos_stops_early():
+    cfg, params = _model_params()
+    prompt = RNG.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    ref = ServeEngine(cfg, params, ServeConfig(max_len=MAX_LEN, temperature=0.0))
+    first = int(np.asarray(ref.generate(jnp.asarray(prompt)[None], 1)[0])[0, 0])
+
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN))
+    uid = eng.submit(prompt, 30, eos_id=first)  # greedy hits EOS immediately
+    done = eng.run()
+    assert done[uid] == [first]
+
+
+def test_continuous_backpressure_more_requests_than_slots():
+    cfg, params = _model_params()
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN))
+    uids = [eng.submit(RNG.integers(0, cfg.vocab_size, (3 + i,)), 2)
+            for i in range(5)]
+    while not eng.scheduler.done():
+        eng.step()
+        assert len(eng.scheduler.active_slots) <= 2  # pool never oversubscribes
+    assert sorted(eng.scheduler.finished) == sorted(uids)
+    assert all(len(v) == 2 for v in eng.scheduler.finished.values())
+
+
+def test_continuous_sampling_independent_of_cotenants():
+    """Per-request PRNG streams: a sampled request draws the same tokens
+    whether it runs alone or packed with co-tenants."""
+    cfg, params = _model_params()
+    prompt = RNG.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+
+    solo = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN, temperature=1.0))
+    u_solo = solo.submit(prompt, 3)
+    toks_solo = solo.run()[u_solo]
+
+    packed = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN, temperature=1.0))
+    u_same = packed.submit(prompt, 3)  # same uid 0 -> same request stream
+    packed.submit(RNG.integers(0, cfg.vocab_size, (9,)), 4)
+    assert packed.run()[u_same] == toks_solo
+
+
+def test_continuous_rejects_non_attention_families():
+    cfg, params = _model_params("mamba2_130m")
+    with pytest.raises(ValueError, match="attention-family"):
+        ContinuousBatchingEngine(cfg, params, ContinuousConfig(num_slots=2))
+
+
+def test_continuous_vlm_mrope_parity():
+    """Per-slot 'pos' counters diverge from 'len' for VLM (M-RoPE restarts
+    after the patch grid) — the pool must track both."""
+    cfg, params = _model_params("qwen2_vl_7b")
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32) for n in (5, 9)]
+    pe = [RNG.standard_normal((1, cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+          for _ in prompts]
+    gens = [3, 2]
+
+    ref = ServeEngine(cfg, params, ServeConfig(max_len=MAX_LEN, temperature=0.0))
+    expected = [
+        np.asarray(ref.generate(jnp.asarray(p)[None], g,
+                                patch_embeds=jnp.asarray(e))[0])[0].tolist()
+        for p, g, e in zip(prompts, gens, pe)]
+
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN))
+    uids = [eng.submit(p, g, patch_embeds=e)
+            for p, g, e in zip(prompts, gens, pe)]
+    done = eng.run()
+    assert [done[u] for u in uids] == expected
+
+
+def test_continuous_overflow_rejected_at_submit():
+    """A request that cannot fit its whole generation in the slot cache is
+    rejected up front (silent K/V drops would corrupt output)."""
+    cfg, params = _model_params()
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=1, max_len=16))
+    with pytest.raises(ValueError, match="cache rows"):
+        eng.submit(RNG.integers(0, cfg.vocab_size, (12,)), 10)
+    # prompt 12 + 5 new tokens writes 12 + 4 rows = exactly max_len: fits
+    eng.submit(RNG.integers(0, cfg.vocab_size, (12,)), 5)
+    assert all(len(v) == 5 for v in eng.run().values())
+
+
+def test_run_max_ticks_allows_exact_drain():
+    cfg, params = _model_params()
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=1, max_len=16))
+    eng.submit(RNG.integers(0, cfg.vocab_size, (4,)), 1)
+    done = eng.run(max_ticks=1)  # finishes on tick 1 -> must not raise
+    assert len(done) == 1
