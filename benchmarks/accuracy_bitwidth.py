@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.attention import SoftmaxConfig, attention
+from repro import ops
 from repro.core.fixedpoint import FixedPointFormat
 
 D, H, LAYERS, VOCAB, CLASSES, SEQ = 64, 4, 2, 32, 8, 32
@@ -63,14 +63,15 @@ def _norm(x):
     return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) / jnp.sqrt(D) + 1e-6)
 
 
-def forward(p, toks, softmax: SoftmaxConfig):
+def forward(p, toks, softmax: ops.SoftmaxSpec):
+    spec = ops.AttentionSpec(impl="reference", softmax=softmax)  # bidirectional
     x = p["emb"][toks] + p["pos"][None]
     for lp in p["layers"]:
         xn = _norm(x)
         q = (xn @ lp["wq"]).reshape(*xn.shape[:2], H, D // H)
         k = (xn @ lp["wk"]).reshape(*xn.shape[:2], H, D // H)
         v = (xn @ lp["wv"]).reshape(*xn.shape[:2], H, D // H)
-        a = attention(q, k, v, softmax=softmax, causal=False)  # bidirectional
+        a = ops.attention(q, k, v, spec)
         x = x + a.reshape(xn.shape) @ lp["wo"]
         x = x + jax.nn.gelu(_norm(x) @ lp["w1"]) @ lp["w2"]
     return x[:, 0] @ p["head"]  # classify from the cue position
@@ -79,7 +80,7 @@ def forward(p, toks, softmax: SoftmaxConfig):
 def train(steps=400, lr=2e-3, seed=0):
     key = jax.random.PRNGKey(seed)
     p = init_params(key)
-    exact = SoftmaxConfig(kind="exact")
+    exact = ops.SoftmaxSpec(kind="exact")
     mom = jax.tree.map(jnp.zeros_like, p)
     vel = jax.tree.map(jnp.zeros_like, p)
 
@@ -106,7 +107,7 @@ def train(steps=400, lr=2e-3, seed=0):
     return p
 
 
-def evaluate(p, softmax: SoftmaxConfig, seed=9) -> float:
+def evaluate(p, softmax: ops.SoftmaxSpec, seed=9) -> float:
     toks, cls = gen_data(1024, seed)
     pred = jnp.argmax(forward(p, toks, softmax), -1)
     return float(jnp.mean(pred == cls))
@@ -114,7 +115,7 @@ def evaluate(p, softmax: SoftmaxConfig, seed=9) -> float:
 
 def run() -> Dict[str, float]:
     p = train()
-    results = {"exact": evaluate(p, SoftmaxConfig(kind="exact"))}
+    results = {"exact": evaluate(p, ops.SoftmaxSpec(kind="exact"))}
     sweeps = [
         ("mrpc_9b", FixedPointFormat(6, 3)),
         ("cnews_8b", FixedPointFormat(6, 2)),
@@ -126,7 +127,7 @@ def run() -> Dict[str, float]:
         ("2b", FixedPointFormat(1, 1)),
     ]
     for name, fmt in sweeps:
-        results[name] = evaluate(p, SoftmaxConfig(kind="star", fmt=fmt))
+        results[name] = evaluate(p, ops.SoftmaxSpec(kind="star", precision=fmt))
     return results
 
 

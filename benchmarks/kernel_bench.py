@@ -1,22 +1,32 @@
-"""Kernel micro-bench: interpret-mode timings (CPU correctness harness) +
-the roofline-relevant op accounting for the STAR kernels.
+"""Kernel micro-bench, driven by the ``repro.ops`` registry.
 
-Wall-times here are CPU-interpret numbers (NOT TPU performance); the derived
-column reports the kernel's arithmetic-intensity bookkeeping used by §Perf.
+Instead of hardcoded function calls, the sweep *iterates the registered
+backends* for each op — a new backend shows up in the sweep the moment it
+is registered — and every record carries the resolved spec, so an emitted
+JSON row is a reproducible invocation, not just a number.
+
+Wall-times on CPU are interpret-mode numbers (NOT TPU performance); the
+derived column reports the kernel's arithmetic-intensity bookkeeping used
+by §Perf.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench                # all impls
+    PYTHONPATH=src python -m benchmarks.kernel_bench --impl pallas  # one impl
+    PYTHONPATH=src python -m benchmarks.kernel_bench --json out.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops
 from repro.core.fixedpoint import DEFAULT_FORMAT
-from repro.kernels.flash_star.ops import flash_star_op
-from repro.kernels.star_softmax.ops import star_softmax_op
-from repro.kernels.crossbar_matmul.ops import crossbar_matmul_op
 
 
 def _t(f, iters=3):
@@ -27,36 +37,115 @@ def _t(f, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def main():
+def _record(records, name, us, spec, **derived):
+    row = {"name": name, "us": round(us, 1), "spec": ops.spec_json(spec), **derived}
+    records.append(row)
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us:.0f},{extra}" if extra else f"{name},{us:.0f}")
+
+
+def _valid_spec(spec):
+    """True when the selected backend's capability table accepts the spec."""
+    try:
+        ops.resolve(spec)
+        return True
+    except ops.OpDispatchError:
+        return False
+
+
+def sweep_softmax(records: List[Dict[str, Any]], impl_filter: Optional[str]) -> None:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(64, 512)) * 4, jnp.float32)
-    us = _t(lambda: star_softmax_op(x, DEFAULT_FORMAT))
     # STAR op accounting: per element 1 quant + 1 LUT; per row 1 VMM(256) + 1 div
-    ops = x.size * 2 + x.shape[0] * (DEFAULT_FORMAT.num_levels * 2 + 1)
-    print(f"star_softmax_64x512,{us:.0f},engine_ops={ops}")
+    star_ops = x.size * 2 + x.shape[0] * (DEFAULT_FORMAT.num_levels * 2 + 1)
+    for backend in ops.backends("softmax"):
+        if impl_filter and backend.impl != impl_filter:
+            continue
+        kind = "exact" if backend.capabilities.get("kind") == ("exact",) else "star"
+        spec = ops.validate(ops.SoftmaxSpec(impl=backend.impl, kind=kind))
+        us = _t(lambda: ops.softmax(x, spec))
+        derived = {"engine_ops": star_ops} if kind == "star" else {}
+        _record(records, f"softmax_{backend.impl}_64x512", us, spec, **derived)
 
+
+def sweep_attention(records: List[Dict[str, Any]], impl_filter: Optional[str]) -> None:
+    rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
-    us = _t(lambda: flash_star_op(q, k, v, causal=True, block_q=64, block_k=64), iters=2)
     flops = 4 * 256 * 256 * 4 * 64  # QK^T + PV
-    print(f"flash_star_256,{us:.0f},attn_flops={flops}")
-    us8 = _t(lambda: flash_star_op(q, k, v, causal=True, pv_int8=True,
-                                   block_q=64, block_k=64), iters=2)
-    print(f"flash_star_256_int8pv,{us8:.0f},pv_bytes_saved=0.5x")
+    for backend in ops.backends("attention"):
+        if impl_filter and backend.impl != impl_filter:
+            continue
+        spec = ops.validate(ops.AttentionSpec(
+            impl=backend.impl, causal=True, block_q=64, block_k=64, block_kv=64
+        ))
+        us = _t(lambda: ops.attention(q, k, v, spec), iters=2)
+        _record(records, f"attn_{backend.impl}_256", us, spec, attn_flops=flops)
+        if _valid_spec(spec := ops.AttentionSpec(
+            impl=backend.impl, causal=True, block_q=64, block_k=64, pv_int8=True
+        )):
+            us8 = _t(lambda: ops.attention(q, k, v, spec), iters=2)
+            _record(
+                records, f"attn_{backend.impl}_256_int8pv", us8, spec,
+                pv_bytes_saved="0.5x",
+            )
 
-    from repro.kernels.ssd_scan.ops import ssd_scan_op
+
+def sweep_matmul(records: List[Dict[str, Any]], impl_filter: Optional[str]) -> None:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 256)) * 0.05, jnp.float32)
+    for backend in ops.backends("matmul"):
+        if impl_filter and backend.impl != impl_filter:
+            continue
+        spec = ops.validate(ops.MatmulSpec(impl=backend.impl))
+        us = _t(lambda: ops.matmul(a, w, spec))
+        derived = {}
+        if backend.impl == "hwmodel":  # crossbar accounting only where one exists
+            xbar = spec.crossbar
+            derived["xbar_reads"] = (256 // xbar.tile_rows) * (256 // xbar.tile_cols)
+        _record(records, f"matmul_{backend.impl}_64x256x256", us, spec, **derived)
+
+
+def sweep_ssd_scan(records: List[Dict[str, Any]], impl_filter: Optional[str]) -> None:
+    rng = np.random.default_rng(0)
     xdt = jnp.asarray(rng.normal(size=(1, 256, 8, 32)), jnp.float32)
     ad = -jnp.abs(jnp.asarray(rng.normal(size=(1, 256, 8)) * 0.1, jnp.float32))
     bm = jnp.asarray(rng.normal(size=(1, 256, 32)) * 0.3, jnp.float32)
     cm = jnp.asarray(rng.normal(size=(1, 256, 32)) * 0.3, jnp.float32)
-    us = _t(lambda: ssd_scan_op(xdt, ad, bm, cm, chunk=64)[0], iters=2)
-    print(f"ssd_scan_256,{us:.0f},vmem_state_bytes={8*32*32*4}")
+    for backend in ops.backends("ssd_scan"):
+        if impl_filter and backend.impl != impl_filter:
+            continue
+        spec = ops.validate(ops.ScanSpec(impl=backend.impl, chunk=64))
+        us = _t(lambda: ops.ssd_scan(xdt, ad, bm, cm, spec)[0], iters=2)
+        _record(
+            records, f"ssd_scan_{backend.impl}_256", us, spec,
+            vmem_state_bytes=8 * 32 * 32 * 4,
+        )
 
-    a = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(256, 256)) * 0.05, jnp.float32)
-    us = _t(lambda: crossbar_matmul_op(a, w))
-    print(f"crossbar_matmul_64x256x256,{us:.0f},xbar_reads={(256//128)*(256//128)}")
+
+def main(argv: Optional[List[str]] = None) -> bool:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--impl", default=None,
+        help="only sweep this registry impl (default: every registered backend)",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write the records (incl. resolved specs) as JSON",
+    )
+    args = ap.parse_args(argv)
+
+    records: List[Dict[str, Any]] = []
+    sweep_softmax(records, args.impl)
+    sweep_attention(records, args.impl)
+    sweep_ssd_scan(records, args.impl)
+    sweep_matmul(records, args.impl)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} records to {args.json}")
     return True
 
 

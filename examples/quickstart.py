@@ -1,21 +1,22 @@
-"""Quickstart: the STAR softmax engine in three acts.
+"""Quickstart: the STAR softmax engine in four acts.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. drop-in quantized softmax (the paper's engine),
 2. STAR attention (two-pass and vector-pipelined forms agree),
-3. the Pallas kernel matches both.
+3. the Pallas kernel matches both,
+4. one dispatch layer (repro.ops) swaps between all of them.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops
 from repro.core import (
     DEFAULT_FORMAT, FORMAT_MRPC, STAR_SOFTMAX, EXACT_SOFTMAX,
     attention, blocked_attention, exact_softmax, star_softmax,
 )
-from repro.kernels.flash_star.ops import flash_star_op
 
 rng = np.random.default_rng(0)
 
@@ -42,10 +43,23 @@ exact = attention(q, k, v, softmax=EXACT_SOFTMAX, causal=True)
 print("  STAR vs exact attention:   ", float(jnp.max(jnp.abs(two_pass - exact))))
 
 # --- 3. the fused Pallas kernel ----------------------------------------------
-kern = flash_star_op(q, k, v, causal=True, block_q=32, block_k=32)
-print("\nflash_star Pallas kernel (interpret mode)")
+flash = ops.AttentionSpec(impl="pallas", causal=True, block_q=32, block_k=32)
+kern = ops.attention(q, k, v, flash)
+print("\nflash_star Pallas kernel (interpret =", ops.default_interpret(), "here)")
 print("  kernel vs two-pass:", float(jnp.max(jnp.abs(kern - two_pass))))
-kern8 = flash_star_op(q, k, v, causal=True, pv_int8=True, block_q=32, block_k=32)
+kern8 = ops.attention(q, k, v, flash, pv_int8=True)
 print("  int8 P*V variant err:", float(jnp.max(jnp.abs(kern8 - exact))),
       "(beyond-paper: 2x MXU throughput)")
+
+# --- 4. the dispatch layer ----------------------------------------------------
+print("\nrepro.ops registry")
+for backend in ops.backends("attention"):
+    spec = ops.AttentionSpec(impl=backend.impl, causal=True,
+                             block_q=32, block_k=32, block_kv=32)
+    out = ops.attention(q, k, v, spec)
+    print(f"  attention[{backend.impl:9s}] vs two-pass:",
+          f"{float(jnp.max(jnp.abs(out - two_pass))):.2e}")
+p_policy = ops.softmax(x, ops.SoftmaxSpec(precision="auto:mrpc"))
+print("  named precision policy auto:mrpc ==", FORMAT_MRPC.short_name(),
+      "err:", float(jnp.max(jnp.abs(p_policy - p9))))
 print("\nOK")

@@ -1,4 +1,12 @@
-"""Model / run configuration dataclasses shared by all architectures."""
+"""Model / run configuration dataclasses shared by all architectures.
+
+Op selection lives in ``repro.ops`` specs: a config carries an optional
+:class:`~repro.ops.specs.SoftmaxSpec` / :class:`~repro.ops.specs.AttentionSpec`
+pair (the canonical form — see ``bert_base_star.py`` / ``granite_8b.py``),
+and the legacy loose fields (``softmax_kind`` / ``softmax_mode`` /
+``attn_impl`` / ...) survive as deprecated constructor inputs that the
+``softmax_spec`` / ``attention_spec`` properties fold into specs.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +15,10 @@ from typing import Optional, Tuple
 
 from repro.core.attention import SoftmaxConfig
 from repro.core.fixedpoint import FixedPointFormat
+from repro.ops.specs import AttentionSpec, SoftmaxSpec
+
+# legacy attn_impl names -> registry impls (new names pass through)
+_ATTN_IMPLS = {"naive": "reference", "blocked": "xla", "flash": "pallas"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,13 +39,20 @@ class ModelConfig:
     mlp_type: str = "swiglu"  # swiglu | gelu
     tie_embeddings: bool = False
 
-    # --- the paper's technique ---
+    # --- the paper's technique (repro.ops dispatch) ---
+    # Canonical form: specs.  ``softmax`` governs every softmax in the
+    # model (attention rows, MoE router, output sampling); ``attention``
+    # picks the attention backend + blocking and, when set, fully
+    # describes the op (including its nested softmax).
+    softmax: Optional[SoftmaxSpec] = None
+    attention: Optional[AttentionSpec] = None
+    star_router: bool = True  # STAR softmax on the MoE router too
+    # Deprecated loose fields (used only when the specs above are None).
     softmax_kind: str = "star"  # star | star_ste | exact
     softmax_int_bits: int = 6
     softmax_frac_bits: int = 2
     softmax_mode: str = "gather"  # gather | onehot | histogram
-    star_router: bool = True  # STAR softmax on the MoE router too
-    attn_impl: str = "blocked"  # blocked | naive | flash
+    attn_impl: str = "blocked"  # naive/reference | blocked/xla | flash/pallas
     attn_block_size: int = 512
     # decode KV-cache write: "dus" (dynamic_update_slice) or "onehot"
     # (masked blend).  With the cache seq dim sharded for SP decode, a
@@ -95,15 +114,69 @@ class ModelConfig:
 
     @property
     def softmax_format(self) -> FixedPointFormat:
+        fmt = self.softmax_spec.fmt
+        if fmt is not None:
+            return fmt
         return FixedPointFormat(self.softmax_int_bits, self.softmax_frac_bits)
 
     @property
+    def softmax_spec(self) -> SoftmaxSpec:
+        """The softmax contract for this model (repro.ops dispatch).
+
+        Resolution: the ``softmax`` spec field if set, else the nested
+        softmax of the ``attention`` spec, else a spec built from the
+        legacy loose fields.  Legacy fields moved off their defaults still
+        win over a carried spec, so ``dataclasses.replace(cfg,
+        softmax_kind="exact")`` (the test idiom) works on every config.
+        """
+        base = self.softmax
+        if base is None and self.attention is not None:
+            base = self.attention.softmax
+        if base is None:
+            return SoftmaxSpec(
+                kind=self.softmax_kind,
+                mode=self.softmax_mode,
+                precision=FixedPointFormat(
+                    self.softmax_int_bits, self.softmax_frac_bits
+                ),
+            )
+        updates = {}
+        if self.softmax_kind != "star":
+            updates["kind"] = self.softmax_kind
+        if self.softmax_mode != "gather":
+            updates["mode"] = self.softmax_mode
+        if (self.softmax_int_bits, self.softmax_frac_bits) != (6, 2):
+            updates["precision"] = FixedPointFormat(
+                self.softmax_int_bits, self.softmax_frac_bits
+            )
+        return dataclasses.replace(base, **updates) if updates else base
+
+    @property
+    def attention_spec(self) -> AttentionSpec:
+        """The attention contract (causal/window/ragged applied per call)."""
+        if self.attention is None:
+            return AttentionSpec(
+                impl=_ATTN_IMPLS.get(self.attn_impl, self.attn_impl),
+                softmax=self.softmax_spec,
+                block_q=min(self.attn_block_size, 128),
+                block_k=min(self.attn_block_size, 128),
+                block_kv=self.attn_block_size,
+            )
+        # legacy-field overrides applied on top of a carried spec (the
+        # dataclasses.replace(cfg, attn_...=...) test idiom)
+        updates = {"softmax": self.softmax_spec}
+        if self.attn_impl != "blocked":
+            updates["impl"] = _ATTN_IMPLS.get(self.attn_impl, self.attn_impl)
+        if self.attn_block_size != 512:
+            updates["block_q"] = min(self.attn_block_size, 128)
+            updates["block_k"] = min(self.attn_block_size, 128)
+            updates["block_kv"] = self.attn_block_size
+        return dataclasses.replace(self.attention, **updates)
+
+    @property
     def softmax_config(self) -> SoftmaxConfig:
-        if self.softmax_kind == "exact":
-            return SoftmaxConfig(kind="exact")
-        return SoftmaxConfig(
-            kind=self.softmax_kind, fmt=self.softmax_format, mode=self.softmax_mode
-        )
+        """Deprecated: the pre-dispatch config object (core.attention)."""
+        return SoftmaxConfig.from_spec(self.softmax_spec)
 
     def validate(self) -> "ModelConfig":
         assert self.num_heads % self.num_kv_heads == 0, "GQA divisibility"

@@ -3,9 +3,15 @@
 The paper profiles softmax latency and accuracy on BERT-base over CNEWS /
 MRPC / CoLA.  We carry it as a causal-LM-shaped config for the framework
 plus a bidirectional encoder classifier built from the same layers inside
-``benchmarks/accuracy_bitwidth.py`` (the paper's accuracy protocol)."""
+``benchmarks/accuracy_bitwidth.py`` (the paper's accuracy protocol).
+
+The softmax precision is the named policy ``"auto:cnews"`` — resolved
+through ``core.precision.policy_for`` at dispatch time, i.e. the paper's
+own calibrated per-dataset format table, carried symbolically in the
+config instead of as loose bit-count fields."""
 
 from repro.configs.base import ModelConfig
+from repro.ops import SoftmaxSpec
 
 
 def config() -> ModelConfig:
@@ -19,6 +25,7 @@ def config() -> ModelConfig:
         d_ff=3072,
         vocab_size=30522,
         mlp_type="gelu",
+        softmax=SoftmaxSpec(kind="star", mode="histogram", precision="auto:cnews"),
         param_dtype="float32",
         compute_dtype="float32",
     )
@@ -35,6 +42,7 @@ def smoke_config() -> ModelConfig:
         d_ff=128,
         vocab_size=256,
         mlp_type="gelu",
+        softmax=SoftmaxSpec(kind="star", mode="histogram", precision="auto:cnews"),
         param_dtype="float32",
         compute_dtype="float32",
         remat=False,

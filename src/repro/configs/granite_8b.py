@@ -1,7 +1,14 @@
 """granite-8b [arXiv:2405.04324; hf] — llama-arch code model.
-36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152."""
+36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152.
+
+Carries its op contract as ``repro.ops`` specs (the canonical form): the
+online-blocked XLA attention pipeline around the STAR softmax engine.
+"""
 
 from repro.configs.base import ModelConfig
+from repro.ops import AttentionSpec, SoftmaxSpec
+
+STAR_GATHER = SoftmaxSpec(kind="star", mode="gather")
 
 
 def config() -> ModelConfig:
@@ -15,6 +22,7 @@ def config() -> ModelConfig:
         d_ff=14336,
         vocab_size=49152,
         rope_theta=10000.0,
+        attention=AttentionSpec(impl="xla", softmax=STAR_GATHER, block_kv=512),
         param_dtype="float32",
         compute_dtype="bfloat16",
     )
@@ -30,7 +38,9 @@ def smoke_config() -> ModelConfig:
         num_kv_heads=2,
         d_ff=128,
         vocab_size=256,
-        attn_block_size=32,
+        attention=AttentionSpec(
+            impl="xla", softmax=STAR_GATHER, block_q=32, block_k=32, block_kv=32
+        ),
         param_dtype="float32",
         compute_dtype="float32",
         remat=False,

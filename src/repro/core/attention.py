@@ -56,6 +56,14 @@ class SoftmaxConfig:
         if self.kind not in ("exact", "star", "star_ste"):
             raise ValueError(f"unknown softmax kind {self.kind!r}")
 
+    @classmethod
+    def from_spec(cls, spec) -> "SoftmaxConfig":
+        """Build from a ``repro.ops.SoftmaxSpec`` (duck-typed: no import —
+        core is a dispatch *target*, the specs live a layer above)."""
+        if spec.kind == "exact":
+            return cls(kind="exact")
+        return cls(kind=spec.kind, fmt=spec.fmt, mode=spec.mode)
+
     def apply(self, scores: jax.Array, where: Optional[jax.Array] = None) -> jax.Array:
         if self.kind == "exact":
             if where is not None:

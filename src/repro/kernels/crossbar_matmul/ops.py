@@ -1,18 +1,19 @@
-"""Public wrapper: quantization + ADC calibration + the Pallas kernel."""
+"""Deprecated shim: use ``repro.ops.matmul`` with a ``MatmulSpec``.
+
+Kept so pre-dispatch call sites keep working unchanged; it folds the old
+kwargs into a spec (``impl="hwmodel"`` — the crossbar behavioural model)
+and dispatches through the registry.  ``interpret=None`` now means
+"platform default".
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
-from repro.kernels.crossbar_matmul.ref import (
-    CrossbarSpec,
-    DEFAULT_SPEC,
-    _pad_to,
-    adc_step,
-    quantize_operands,
-)
-from repro.kernels.crossbar_matmul.kernel import crossbar_matmul_pallas
+import jax
+
+from repro import ops
+from repro.kernels.crossbar_matmul.ref import DEFAULT_SPEC, CrossbarSpec
 
 
 def crossbar_matmul_op(
@@ -22,19 +23,17 @@ def crossbar_matmul_op(
     spec: CrossbarSpec = DEFAULT_SPEC,
     ranging: str = "calibrated",
     block_m: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """x [M, K] @ w [K, N] through the RRAM crossbar behavioural model."""
-    m, kdim = x.shape
-    _, n = w.shape
-    (xq, sx), (wq, sw) = quantize_operands(x, w, spec)
-    xq = _pad_to(xq, 1, spec.tile_rows)
-    wq = _pad_to(_pad_to(wq, 0, spec.tile_rows), 1, spec.tile_cols)
-    step = adc_step(xq, wq, spec, ranging)
-
-    out = crossbar_matmul_pallas(
-        xq.astype(jnp.int8) if spec.weight_bits <= 8 else xq,
-        wq.astype(jnp.int8) if spec.weight_bits <= 8 else wq,
-        step, spec=spec, block_m=block_m, interpret=interpret,
+    return ops.matmul(
+        x,
+        w,
+        ops.MatmulSpec(
+            impl="hwmodel",
+            crossbar=spec,
+            ranging=ranging,
+            block_m=block_m,
+            interpret=interpret,
+        ),
     )
-    return out[:, :n] * (sx * sw)

@@ -1,7 +1,8 @@
-"""Public wrapper for flash_star: layout handling + defaults.
+"""Deprecated shim: use ``repro.ops.attention`` with an ``AttentionSpec``.
 
-Accepts the framework-native layout ``q [B, Tq, Hq, D]``, ``k/v
-[B, Tk, Hkv, D]`` and returns ``[B, Tq, Hq, D]``.
+Kept so pre-dispatch call sites keep working unchanged; it folds the old
+kwargs into a spec (``fmt=None`` -> the exact-softmax kind) and dispatches
+through the registry.  ``interpret=None`` now means "platform default".
 """
 
 from __future__ import annotations
@@ -9,10 +10,9 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro import ops
 from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
-from repro.kernels.flash_star.kernel import flash_star_attention
 
 
 def flash_star_op(
@@ -29,22 +29,23 @@ def flash_star_op(
     block_q: int = 128,
     block_k: int = 128,
     pv_int8: bool = False,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    b, tq, hq, d = q.shape
-    _, tk, hkv, _ = k.shape
-    if kv_valid_len is None:
-        kv_valid_len = jnp.full((b,), tk, dtype=jnp.int32)
-    info = jnp.concatenate(
-        [jnp.asarray(q_offset, jnp.int32).reshape(1), kv_valid_len.astype(jnp.int32)]
+    softmax = (
+        ops.SoftmaxSpec(kind="exact")
+        if fmt is None
+        else ops.SoftmaxSpec(kind="star", precision=fmt)
     )
-    qh = jnp.transpose(q, (0, 2, 1, 3))
-    kh = jnp.transpose(k, (0, 2, 1, 3))
-    vh = jnp.transpose(v, (0, 2, 1, 3))
-    out = flash_star_attention(
-        qh, kh, vh, info,
-        fmt=fmt, causal=causal, sliding_window=sliding_window,
-        sm_scale=sm_scale, block_q=block_q, block_k=block_k,
-        pv_int8=pv_int8, interpret=interpret,
+    spec = ops.AttentionSpec(
+        impl="pallas",
+        softmax=softmax,
+        causal=causal,
+        sliding_window=sliding_window,
+        block_q=block_q,
+        block_k=block_k,
+        pv_int8=pv_int8,
+        interpret=interpret,
     )
-    return jnp.transpose(out, (0, 2, 1, 3))
+    return ops.attention(
+        q, k, v, spec, q_offset=q_offset, kv_valid_len=kv_valid_len, scale=sm_scale
+    )

@@ -1,12 +1,16 @@
-"""Public wrapper for the fused SSD chunk-scan kernel."""
+"""Deprecated shim: use ``repro.ops.ssd_scan`` with a ``ScanSpec``.
+
+Kept so pre-dispatch call sites keep working unchanged.  ``interpret=None``
+now means "platform default".
+"""
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
-from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro import ops
 
 
 def ssd_scan_op(
@@ -16,7 +20,9 @@ def ssd_scan_op(
     cmat: jax.Array,
     *,
     chunk: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused SSD: (y [B,T,H,P], final state [B,H,N,P])."""
-    return ssd_scan_pallas(xdt, a, bmat, cmat, chunk=chunk, interpret=interpret)
+    return ops.ssd_scan(
+        xdt, a, bmat, cmat, ops.ScanSpec(impl="pallas", chunk=chunk, interpret=interpret)
+    )

@@ -1,16 +1,19 @@
-"""Public jit'd wrapper for the STAR softmax Pallas kernel.
+"""Deprecated shim: use ``repro.ops.softmax`` with a ``SoftmaxSpec``.
 
-``interpret`` defaults to True because this container is CPU-only; on real
-TPU hardware pass ``interpret=False`` (the launcher does this via
-``repro.launch`` when it detects TPU devices).
+Kept so pre-dispatch call sites keep working unchanged; it simply folds
+the old kwargs into a spec and dispatches through the registry.
+``interpret=None`` now means "platform default" (TPU compiles, everything
+else interprets) instead of the old hardcoded ``True``.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro import ops
 from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
-from repro.kernels.star_softmax.kernel import star_softmax_pallas
 
 
 def star_softmax_op(
@@ -20,13 +23,33 @@ def star_softmax_op(
     block_rows: int = 8,
     use_histogram: bool = False,
     use_mxu_lut: bool = False,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    return star_softmax_pallas(
+    if use_histogram and use_mxu_lut:
+        # The spec contract has three *exclusive* dataflow modes; the old
+        # kernel flags were orthogonal.  Preserve the legacy combination
+        # (one-hot MXU numerator + histogram denominator) bit-exactly by
+        # calling the kernel directly — new code wanting this dataflow
+        # should register a backend for it.
+        from repro.kernels.star_softmax.kernel import star_softmax_pallas
+
+        return star_softmax_pallas(
+            x,
+            fmt=fmt,
+            block_rows=block_rows,
+            use_histogram=True,
+            use_mxu_lut=True,
+            interpret=ops.resolve_interpret(interpret),
+        )
+    mode = "histogram" if use_histogram else ("onehot" if use_mxu_lut else "gather")
+    return ops.softmax(
         x,
-        fmt=fmt,
-        block_rows=block_rows,
-        use_histogram=use_histogram,
-        use_mxu_lut=use_mxu_lut,
-        interpret=interpret,
+        ops.SoftmaxSpec(
+            impl="pallas",
+            kind="star",
+            mode=mode,
+            precision=fmt,
+            block_rows=block_rows,
+            interpret=interpret,
+        ),
     )

@@ -7,6 +7,12 @@
   # continuous batching (slot pool, staggered mixed-length requests)
   PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
       --engine continuous --requests 8 --slots 4 --gen 16
+
+Backend selection goes through the ``repro.ops`` registry: the config's
+specs pick the defaults, ``--attn-impl`` / ``--softmax-impl`` retarget
+every dispatch via ``ops.use(...)``, and Pallas interpret-vs-compile is
+the platform's choice (``ops.default_interpret``) — the launcher no
+longer flips any kernel flag by hand.
 """
 
 from __future__ import annotations
@@ -98,20 +104,39 @@ def main() -> int:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument(
+        "--attn-impl", default=None, metavar="IMPL",
+        help="force an attention backend (registry impl: reference|xla|pallas)",
+    )
+    ap.add_argument(
+        "--softmax-impl", default=None, metavar="IMPL",
+        help="force a softmax backend (registry impl: reference|xla|pallas)",
+    )
     args = ap.parse_args()
 
     import jax
 
+    from repro import ops
     from repro.configs import get_config, get_smoke_config
     from repro.models.param import materialize
     from repro.models.registry import build_model
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = build_model(cfg)
-    params = materialize(model.param_specs(), jax.random.PRNGKey(0))
-    if args.engine == "continuous":
-        return run_continuous(args, cfg, params)
-    return run_lockstep(args, cfg, params)
+    # fail fast on a spec the registry cannot serve, before any lowering
+    ops.validate(cfg.attention_spec, impl=args.attn_impl or cfg.attention_spec.impl)
+    ops.validate(cfg.softmax_spec, impl=args.softmax_impl or cfg.softmax_spec.impl)
+
+    overrides = {}
+    if args.attn_impl:
+        overrides["attention"] = args.attn_impl
+    if args.softmax_impl:
+        overrides["softmax"] = args.softmax_impl
+    with ops.use(**overrides):
+        model = build_model(cfg)
+        params = materialize(model.param_specs(), jax.random.PRNGKey(0))
+        if args.engine == "continuous":
+            return run_continuous(args, cfg, params)
+        return run_lockstep(args, cfg, params)
 
 
 if __name__ == "__main__":

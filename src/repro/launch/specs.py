@@ -12,6 +12,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.param import shape_tree
 from repro.models.registry import build_model
@@ -50,6 +51,11 @@ def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[str, Dict[str, Any]]:
     """Returns (step_kind, {name: abstract value}) for the cell."""
+    # Capability-check the config's op specs before building anything: a
+    # backend the registry cannot serve should fail here, with the
+    # registry's actionable error, not halfway through lowering.
+    ops.validate(cfg.attention_spec)
+    ops.validate(cfg.softmax_spec)
     model = build_model(cfg)
     pspecs = model.param_specs()
     b, s = shape.global_batch, shape.seq_len

@@ -14,6 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.param import ParamSpec
@@ -225,9 +226,10 @@ class EncDecLM:
             q = jnp.einsum("btd,dh->bth", hn, bp["cross_attn"]["wq"].astype(dt))
             hd = cfg.resolved_head_dim
             q = q.reshape(b, 1, cfg.num_heads, hd)
-            from repro.core.attention import attention as _attn
-
-            ctx = _attn(q, cc["k"], cc["v"], softmax=cfg.softmax_config, causal=False)
+            ctx = ops.attention(
+                q, cc["k"], cc["v"], cfg.attention_spec,
+                causal=False, sliding_window=None,
+            )
             ctx = ctx.reshape(b, 1, -1)
             h = h + L.attention_out(bp["cross_attn"], ctx, cfg)
             h = h + L.mlp(bp["mlp"], L.layernorm(bp["ln3"], h, cfg.norm_eps), cfg)

@@ -10,9 +10,10 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
+from repro import ops
 from repro.configs.base import ModelConfig
-from repro.core.attention import SoftmaxConfig, attention, blocked_attention
-from repro.core.star_softmax import star_softmax
 from repro.distributed.sharding import with_logical_constraint as wlc
 from repro.models.param import ParamSpec
 
@@ -210,7 +211,6 @@ def attention_block(
     Returns ``(out, cache', (k, v))`` — the fresh (rotated) K/V of this call
     so prefill can prime caches without recomputing projections."""
     b, tq, _ = x.shape
-    softmax = cfg.softmax_config
     q, k, v = _project_qkv(p, x, x if xkv is None else xkv, cfg)
 
     if use_rope and xkv is None:
@@ -297,7 +297,7 @@ def attention_block(
             kvl = jnp.minimum(new_len, cache_t) if window_decode else new_len
             kvl = jnp.broadcast_to(kvl, (b,))
             out = _run_attention(
-                q, k_full, v_full, cfg, softmax,
+                q, k_full, v_full, cfg,
                 causal=False, sliding_window=None, q_offset=0,
                 kv_valid_len=kvl,
             )
@@ -310,7 +310,7 @@ def attention_block(
         fresh_k, fresh_v = k, v
 
     out = _run_attention(
-        q, k, v, cfg, softmax,
+        q, k, v, cfg,
         causal=causal and xkv is None,
         sliding_window=sliding_window,
         q_offset=q_offset,
@@ -319,31 +319,21 @@ def attention_block(
     return out, new_cache, (fresh_k, fresh_v)
 
 
-def _run_attention(q, k, v, cfg: ModelConfig, softmax: SoftmaxConfig, **kw) -> jax.Array:
-    if cfg.attn_impl == "flash":
-        from repro.kernels.flash_star.ops import flash_star_op
-
-        fmt = None if softmax.kind == "exact" else softmax.fmt
-        ctx = flash_star_op(
-            q, k, v, fmt=fmt, causal=kw["causal"],
-            sliding_window=kw["sliding_window"], q_offset=kw["q_offset"],
-            kv_valid_len=kw["kv_valid_len"],
-            block_q=min(cfg.attn_block_size, 128),
-            block_k=min(cfg.attn_block_size, 128),
-        )
-    elif (cfg.attn_impl == "blocked" and k.shape[1] > cfg.attn_block_size
-          and q.shape[1] > 1):
-        # KV-block scanning is for long score rows.  For decode (tq == 1) it
-        # is pure overhead — and with an SP-sharded cache the per-block
-        # re-slicing forces XLA into involuntary resharding of the whole
-        # cache every layer (the §Perf decode finding); the direct einsum
-        # keeps the cache sharding intact and lets the partial softmax
-        # reduce with one small psum.
-        ctx = blocked_attention(
-            q, k, v, softmax=softmax, block_size=cfg.attn_block_size, **kw
-        )
-    else:
-        ctx = attention(q, k, v, softmax=softmax, **kw)
+def _run_attention(
+    q, k, v, cfg: ModelConfig, *, causal, sliding_window, q_offset, kv_valid_len
+) -> jax.Array:
+    # One dispatch for every backend (repro.ops): the config carries the
+    # static contract (impl, softmax engine, blocking), the call site only
+    # supplies the per-invocation masking.  Decode-vs-prefill selection
+    # (scan blocks only for long prefill rows — the §Perf decode finding)
+    # lives inside the "xla" backend.
+    ctx = ops.attention(
+        q, k, v, cfg.attention_spec,
+        causal=causal,
+        sliding_window=sliding_window,
+        q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
+    )
     b, tq = ctx.shape[0], ctx.shape[1]
     return ctx.reshape(b, tq, -1)
 
@@ -416,10 +406,14 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     xg = x.reshape(groups, tg, d)
 
     logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dt)).astype(jnp.float32)
-    if cfg.star_router and cfg.softmax_kind != "exact":
-        probs = star_softmax(logits, cfg.softmax_format, mode=cfg.softmax_mode)
-    else:
-        probs = jax.nn.softmax(logits, axis=-1)
+    spec = cfg.softmax_spec
+    if not cfg.star_router:
+        spec = dataclasses.replace(spec, kind="exact")
+    if spec.kind == "exact":
+        # exact routing distribution: the pallas engine is star-only, so
+        # route the oracle through reference rather than a capability error
+        spec = dataclasses.replace(spec, impl="reference")
+    probs = ops.softmax(logits, spec)
 
     gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [g, t, k]
     gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)

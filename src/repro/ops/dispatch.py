@@ -1,0 +1,120 @@
+"""Dispatch: spec -> (overrides, platform resolution, validation) -> backend.
+
+The resolution order, outermost-wins:
+
+1. the spec itself (or the op's default spec when ``spec=None``);
+2. call-site keyword overrides (any spec field, e.g. ``causal=True`` or
+   ``impl="pallas"``), applied via ``dataclasses.replace``;
+3. active :func:`repro.ops.use` frames (impl / interpret retargeting —
+   inner frames win over outer, and over the spec: that is their purpose);
+4. ``interpret=None`` resolves to the detected platform's default.
+
+The resolved spec is capability-validated against the selected backend
+before the call, so mismatches fail with an actionable error naming the
+field, the backend's supported values, and the impls that do support it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.ops import registry
+from repro.ops.platform import resolve_interpret
+from repro.ops.registry import Backend, OpDispatchError
+from repro.ops.specs import AttentionSpec, MatmulSpec, ScanSpec, SoftmaxSpec, Spec
+
+DEFAULT_SOFTMAX = SoftmaxSpec()
+DEFAULT_ATTENTION = AttentionSpec()
+DEFAULT_MATMUL = MatmulSpec()
+DEFAULT_SSD_SCAN = ScanSpec()
+
+
+def resolve(spec: Spec, **overrides: Any) -> Tuple[Backend, Spec]:
+    """Apply overrides and ``use()`` frames, pick and validate the backend."""
+    if overrides:
+        try:
+            spec = dataclasses.replace(spec, **overrides)
+        except TypeError as exc:
+            fields = [f.name for f in dataclasses.fields(spec)]
+            raise OpDispatchError(
+                f"invalid {type(spec).__name__} override(s) "
+                f"{sorted(overrides)}: valid fields are {fields}"
+            ) from exc
+    ctx = registry.active_overrides(spec.op)
+    updates: dict = {}
+    if "impl" in ctx:
+        updates["impl"] = ctx["impl"]
+    updates["interpret"] = resolve_interpret(ctx.get("interpret", spec.interpret))
+    spec = dataclasses.replace(spec, **updates)
+    backend = registry.get(spec.op, spec.impl)
+    registry.validate(backend, spec)
+    return backend, spec
+
+
+def validate(spec: Spec, **overrides: Any) -> Spec:
+    """Resolve + capability-check a spec without executing anything.
+
+    Launchers call this at config time so a spec the registry cannot serve
+    fails before any lowering starts.  Returns the resolved spec.
+    """
+    return resolve(spec, **overrides)[1]
+
+
+def softmax(
+    x: jax.Array,
+    spec: Optional[SoftmaxSpec] = None,
+    *,
+    where: Optional[jax.Array] = None,
+    axis: int = -1,
+    **overrides: Any,
+) -> jax.Array:
+    """Softmax over ``axis`` through the registered backend for ``spec``."""
+    backend, spec = resolve(spec if spec is not None else DEFAULT_SOFTMAX, **overrides)
+    return backend.fn(spec, x, where=where, axis=axis)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: Optional[AttentionSpec] = None,
+    *,
+    q_offset: Any = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    **overrides: Any,
+) -> jax.Array:
+    """Attention (q [B,Tq,Hq,D], k/v [B,Tk,Hkv,D]) -> [B,Tq,Hq,D]."""
+    backend, spec = resolve(
+        spec if spec is not None else DEFAULT_ATTENTION, **overrides
+    )
+    return backend.fn(
+        spec, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len, scale=scale
+    )
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    spec: Optional[MatmulSpec] = None,
+    **overrides: Any,
+) -> jax.Array:
+    """x [M, K] @ w [K, N] through the registered backend for ``spec``."""
+    backend, spec = resolve(spec if spec is not None else DEFAULT_MATMUL, **overrides)
+    return backend.fn(spec, x, w)
+
+
+def ssd_scan(
+    xdt: jax.Array,
+    a: jax.Array,
+    bmat: jax.Array,
+    cmat: jax.Array,
+    spec: Optional[ScanSpec] = None,
+    **overrides: Any,
+):
+    """Fused SSD chunk scan: (y [B,T,H,P], final state [B,H,N,P])."""
+    backend, spec = resolve(spec if spec is not None else DEFAULT_SSD_SCAN, **overrides)
+    return backend.fn(spec, xdt, a, bmat, cmat)

@@ -1,0 +1,330 @@
+"""Built-in backends: the registry entries shipped with the repo.
+
+Importing this module (done by ``repro.ops``) registers every built-in
+implementation.  Each backend is a thin adapter from the spec contract to
+an existing engine — the pure-jnp oracles in ``repro.core``, plain XLA
+ops, the Pallas kernels in ``repro.kernels``, or the RRAM behavioural
+model.  Numerics live in those modules; this file only routes.
+
+Adding a backend is one call::
+
+    from repro.ops import register
+
+    register(
+        "softmax", "my_impl", my_fn,
+        capabilities={"kind": ("star",), "mode": ("gather", "histogram")},
+        description="...",
+    )
+
+where ``my_fn(spec, x, *, where, axis)`` receives the resolved
+:class:`~repro.ops.specs.SoftmaxSpec` plus the runtime arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import (
+    NEG_INF,
+    SoftmaxConfig,
+    attention as full_attention,
+    blocked_attention,
+)
+from repro.core.star_softmax import exact_softmax, star_softmax, star_softmax_ste
+from repro.kernels.crossbar_matmul.kernel import crossbar_matmul_pallas
+from repro.kernels.crossbar_matmul.ref import _pad_to, adc_step, quantize_operands
+from repro.kernels.flash_star.kernel import flash_star_attention
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.star_softmax.kernel import star_softmax_pallas
+from repro.ops.registry import CapabilityError, register
+from repro.ops.specs import AttentionSpec, MatmulSpec, ScanSpec, SoftmaxSpec
+
+# ---------------------------------------------------------------------------
+# softmax
+
+
+def _softmax_reference(
+    spec: SoftmaxSpec,
+    x: jax.Array,
+    *,
+    where: Optional[jax.Array] = None,
+    axis: int = -1,
+) -> jax.Array:
+    if spec.kind == "exact":
+        if where is not None:
+            x = jnp.where(where, x, NEG_INF)
+        return exact_softmax(x, axis=axis)
+    if spec.kind == "star_ste":
+        if where is not None:
+            # NEG_INF quantizes to the deepest LUT row (probability ~ 0).
+            x = jnp.where(where, x, NEG_INF)
+        return star_softmax_ste(x, spec.fmt, axis, spec.mode)
+    return star_softmax(x, spec.fmt, axis=axis, mode=spec.mode, where=where)
+
+
+def _softmax_xla(
+    spec: SoftmaxSpec,
+    x: jax.Array,
+    *,
+    where: Optional[jax.Array] = None,
+    axis: int = -1,
+) -> jax.Array:
+    if where is not None:
+        x = jnp.where(where, x, NEG_INF)
+    return jax.nn.softmax(x, axis=axis)
+
+
+def _softmax_pallas(
+    spec: SoftmaxSpec,
+    x: jax.Array,
+    *,
+    where: Optional[jax.Array] = None,
+    axis: int = -1,
+) -> jax.Array:
+    if where is not None:
+        raise CapabilityError(
+            "softmax backend 'pallas' does not take a `where` mask (the "
+            "kernel streams dense row tiles); mask upstream or use "
+            "impl='reference'"
+        )
+    moved = axis % x.ndim != x.ndim - 1
+    if moved:
+        x = jnp.moveaxis(x, axis, -1)
+    out = star_softmax_pallas(
+        x,
+        fmt=spec.fmt,
+        block_rows=spec.block_rows,
+        use_histogram=spec.mode == "histogram",
+        use_mxu_lut=spec.mode == "onehot",
+        interpret=spec.interpret,
+    )
+    if moved:
+        out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+register(
+    "softmax",
+    "reference",
+    _softmax_reference,
+    description="pure-jnp STAR engine / FP oracle (core.star_softmax)",
+)
+register(
+    "softmax",
+    "xla",
+    _softmax_xla,
+    capabilities={"kind": ("exact",)},
+    description="jax.nn.softmax — the exact FP path, no quantization",
+)
+register(
+    "softmax",
+    "pallas",
+    _softmax_pallas,
+    capabilities={"kind": ("star",)},
+    description="fused row-tile TPU kernel (kernels.star_softmax)",
+)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def _attention_reference(
+    spec: AttentionSpec,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset=0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    return full_attention(
+        q,
+        k,
+        v,
+        softmax=SoftmaxConfig.from_spec(spec.softmax),
+        causal=spec.causal,
+        sliding_window=spec.sliding_window,
+        q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
+        scale=scale,
+    )
+
+
+def _attention_xla(
+    spec: AttentionSpec,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset=0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    # KV-block scanning is for long score rows.  For decode (tq == 1) it is
+    # pure overhead — and with an SP-sharded cache the per-block re-slicing
+    # forces XLA into involuntary resharding of the whole cache every layer
+    # (the §Perf decode finding); the materialized einsum keeps the cache
+    # sharding intact and lets the partial softmax reduce with one psum.
+    if q.shape[1] == 1 or k.shape[1] <= spec.block_kv:
+        return _attention_reference(
+            spec, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len, scale=scale
+        )
+    return blocked_attention(
+        q,
+        k,
+        v,
+        softmax=SoftmaxConfig.from_spec(spec.softmax),
+        causal=spec.causal,
+        sliding_window=spec.sliding_window,
+        q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
+        scale=scale,
+        block_size=spec.block_kv,
+    )
+
+
+def _attention_pallas(
+    spec: AttentionSpec,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset=0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    # Layout adapter: framework-native [B, T, H, D] -> the kernel's
+    # [B, H, T, D], with (q_offset, per-batch valid lengths) packed into the
+    # kernel's info vector.  The fused kernel always uses the arithmetic-LUT
+    # dataflow; ``spec.softmax.mode`` is a dataflow hint for the unfused
+    # engines and is ignored here.
+    b, _, _, _ = q.shape
+    tk = k.shape[1]
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((b,), tk, dtype=jnp.int32)
+    info = jnp.concatenate(
+        [jnp.asarray(q_offset, jnp.int32).reshape(1), kv_valid_len.astype(jnp.int32)]
+    )
+    qh = jnp.transpose(q, (0, 2, 1, 3))
+    kh = jnp.transpose(k, (0, 2, 1, 3))
+    vh = jnp.transpose(v, (0, 2, 1, 3))
+    out = flash_star_attention(
+        qh,
+        kh,
+        vh,
+        info,
+        fmt=spec.softmax.fmt,  # None for the exact kind
+        causal=spec.causal,
+        sliding_window=spec.sliding_window,
+        sm_scale=scale,
+        block_q=spec.block_q,
+        block_k=spec.block_k,
+        pv_int8=spec.pv_int8,
+        interpret=spec.interpret,
+    )
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+register(
+    "attention",
+    "reference",
+    _attention_reference,
+    capabilities={"pv_int8": (False,)},
+    description="whole-operand attention, scores materialized (core.attention)",
+)
+register(
+    "attention",
+    "xla",
+    _attention_xla,
+    capabilities={"pv_int8": (False,)},
+    description="online-blocked lax.scan pipeline (falls back to the "
+    "materialized path for short rows / single-token decode)",
+)
+register(
+    "attention",
+    "pallas",
+    _attention_pallas,
+    capabilities={"softmax.kind": ("star", "exact")},
+    description="fused flash_star TPU kernel (kernels.flash_star)",
+)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+def _matmul_xla(spec: MatmulSpec, x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w)
+
+
+def _matmul_hwmodel(spec: MatmulSpec, x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [M, K] @ w [K, N] through the RRAM crossbar behavioural model."""
+    xbar = spec.crossbar
+    n = w.shape[1]
+    (xq, sx), (wq, sw) = quantize_operands(x, w, xbar)
+    xq = _pad_to(xq, 1, xbar.tile_rows)
+    wq = _pad_to(_pad_to(wq, 0, xbar.tile_rows), 1, xbar.tile_cols)
+    step = adc_step(xq, wq, xbar, spec.ranging)
+    out = crossbar_matmul_pallas(
+        xq.astype(jnp.int8) if xbar.weight_bits <= 8 else xq,
+        wq.astype(jnp.int8) if xbar.weight_bits <= 8 else wq,
+        step,
+        spec=xbar,
+        block_m=spec.block_m,
+        interpret=spec.interpret,
+    )
+    return out[:, :n] * (sx * sw)
+
+
+register(
+    "matmul",
+    "xla",
+    _matmul_xla,
+    description="native MXU matmul — the performance path",
+)
+register(
+    "matmul",
+    "hwmodel",
+    _matmul_hwmodel,
+    description="RRAM crossbar behavioural model: 8-bit operands on "
+    "tile_rows x tile_cols crossbars through a 5-bit ADC "
+    "(kernels.crossbar_matmul)",
+)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan (mamba2 fused mixer — no softmax, same dispatch machinery)
+
+
+def _ssd_scan_pallas(spec: ScanSpec, xdt, a, bmat, cmat):
+    return ssd_scan_pallas(
+        xdt, a, bmat, cmat, chunk=spec.chunk, interpret=spec.interpret
+    )
+
+
+def _ssd_scan_reference(spec: ScanSpec, xdt, a, bmat, cmat):
+    # Lazy import: the reference delegates to the model's own chunked SSD
+    # (repro.models imports repro.ops at module load — importing it here
+    # at call time keeps the layering acyclic).
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    return ssd_scan_ref(xdt, a, bmat, cmat, chunk=spec.chunk)
+
+
+register(
+    "ssd_scan",
+    "pallas",
+    _ssd_scan_pallas,
+    description="fused SSD chunk-scan TPU kernel (kernels.ssd_scan)",
+)
+register(
+    "ssd_scan",
+    "reference",
+    _ssd_scan_reference,
+    description="pure-jnp chunked SSD oracle (models.ssm via kernels.ssd_scan.ref)",
+)

@@ -1,0 +1,40 @@
+"""Platform detection: one place decides how Pallas kernels execute.
+
+Every ``kernels/*/ops.py`` wrapper used to hardcode ``interpret: bool =
+True`` ("this container is CPU-only") and rely on callers to flip it on
+real hardware.  ``default_interpret()`` replaces all of that: Pallas
+kernels compile natively when a TPU is attached and fall back to interpret
+mode everywhere else — callers (including the launchers) never touch the
+flag unless they explicitly want to override it via a spec or
+``ops.use(interpret=...)``.
+
+``REPRO_OPS_INTERPRET=0|1`` force-overrides detection (escape hatch for
+debugging a miscompiled kernel on TPU, or timing compiled CPU lowering).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+
+@functools.lru_cache(maxsize=None)
+def detected_platform() -> str:
+    """The JAX default backend platform: ``cpu`` | ``gpu`` | ``tpu``."""
+    import jax
+
+    return jax.default_backend()
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode here."""
+    env = os.environ.get("REPRO_OPS_INTERPRET")
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return detected_platform() != "tpu"
+
+
+def resolve_interpret(flag: Optional[bool]) -> bool:
+    """Resolve a spec's tri-state interpret field (None -> platform)."""
+    return default_interpret() if flag is None else flag

@@ -1,0 +1,199 @@
+"""Frozen, hashable op specs — the contract half of the dispatch layer.
+
+A spec fully describes *what* to compute (softmax kind/mode/precision,
+attention masking and blocking, crossbar matmul quantization) and *which*
+backend family computes it (``impl``).  Specs are frozen dataclasses so they
+hash and compare by value: they are safe jit cache keys (``static_argnames``)
+and safe dict keys for the registry.
+
+Precision is either a :class:`~repro.core.fixedpoint.FixedPointFormat`, a
+named policy string ``"auto:<dataset>"`` resolved through
+``repro.core.precision.policy_for`` (the paper's per-dataset calibration),
+or irrelevant when ``kind == "exact"`` (the FP oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Union
+
+from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
+from repro.core.precision import policy_for
+from repro.kernels.crossbar_matmul.ref import DEFAULT_SPEC, CrossbarSpec
+
+SOFTMAX_KINDS = ("star", "star_ste", "exact")
+SOFTMAX_MODES = ("gather", "onehot", "histogram")
+
+Precision = Union[FixedPointFormat, str]
+
+
+def resolve_precision(precision: Precision) -> FixedPointFormat:
+    """Resolve a precision field to a concrete fixed-point format.
+
+    Accepts a :class:`FixedPointFormat` (returned as-is) or a named policy
+    ``"auto:<dataset>"`` (e.g. ``"auto:mrpc"``) resolved via the paper's
+    calibrated per-dataset table in ``core.precision``.
+    """
+    if isinstance(precision, FixedPointFormat):
+        return precision
+    if isinstance(precision, str):
+        if precision.startswith("auto:"):
+            return policy_for(precision.split(":", 1)[1])
+        raise ValueError(
+            f"unknown precision policy {precision!r}: expected a "
+            f"FixedPointFormat or an 'auto:<dataset>' policy name "
+            f"(datasets: cnews, mrpc, cola; anything else falls back to "
+            f"the default {DEFAULT_FORMAT.short_name()} format)"
+        )
+    raise TypeError(
+        f"precision must be a FixedPointFormat or 'auto:<dataset>' string, "
+        f"got {type(precision).__name__}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxSpec:
+    """One softmax invocation: engine kind, dataflow mode, precision, impl.
+
+    ``impl``: ``"reference"`` (pure-jnp engine, ``core.star_softmax``),
+    ``"xla"`` (``jax.nn.softmax`` — exact kind only), ``"pallas"`` (the
+    fused TPU kernel, ``kernels.star_softmax``).
+
+    ``interpret=None`` means "ask the platform": Pallas kernels run in
+    interpret mode unless a TPU is attached (``ops.platform``).
+    """
+
+    impl: str = "reference"
+    kind: str = "star"  # star | star_ste | exact
+    mode: str = "gather"  # gather | onehot | histogram
+    precision: Precision = DEFAULT_FORMAT
+    block_rows: int = 8  # pallas: row tile
+    interpret: Optional[bool] = None  # None -> platform default
+
+    op = "softmax"
+
+    def __post_init__(self) -> None:
+        if self.kind not in SOFTMAX_KINDS:
+            raise ValueError(
+                f"softmax kind must be one of {SOFTMAX_KINDS}, got {self.kind!r}"
+            )
+        if self.mode not in SOFTMAX_MODES:
+            raise ValueError(
+                f"softmax mode must be one of {SOFTMAX_MODES}, got {self.mode!r}"
+            )
+        resolve_precision(self.precision)  # fail early on bad policies
+
+    @property
+    def fmt(self) -> Optional[FixedPointFormat]:
+        """Resolved fixed-point format; ``None`` for the exact oracle."""
+        if self.kind == "exact":
+            return None
+        return resolve_precision(self.precision)
+
+    def tolerance(self) -> float:
+        """Provable max-abs-error bound vs the exact softmax oracle.
+
+        Rounding to the grid moves each logit by at most ``r/2``
+        (``r = 2^-frac_bits``), so every probability ratio is within
+        ``e^r`` of exact: ``|p_hat - p| <= e^r - 1``.  Exact kinds get a
+        float32 roundoff allowance.
+        """
+        fmt = self.fmt
+        if fmt is None:
+            return 1e-6
+        return math.exp(fmt.resolution) - 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """One attention invocation: masking, blocking, and the softmax engine.
+
+    ``impl``: ``"reference"`` (whole-operand, scores materialized),
+    ``"xla"`` (online-blocked ``lax.scan`` pipeline; falls back to the
+    materialized path for short rows and single-token decode), ``"pallas"``
+    (the fused ``flash_star`` kernel).
+
+    ``ragged=True`` declares that calls will pass per-batch
+    ``kv_valid_len`` vectors (continuous-batching slot pools).
+    """
+
+    impl: str = "xla"
+    softmax: SoftmaxSpec = SoftmaxSpec()
+    causal: bool = False
+    sliding_window: Optional[int] = None
+    ragged: bool = False
+    block_q: int = 128  # pallas: query tile
+    block_k: int = 128  # pallas: KV tile
+    block_kv: int = 512  # xla: scan block
+    pv_int8: bool = False  # pallas: int8 P.V MXU path
+    interpret: Optional[bool] = None
+
+    op = "attention"
+
+    def __post_init__(self) -> None:
+        if self.sliding_window is not None and self.sliding_window <= 0:
+            raise ValueError(f"sliding_window must be > 0, got {self.sliding_window}")
+        for field in ("block_q", "block_k", "block_kv"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be > 0, got {getattr(self, field)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulSpec:
+    """One matmul invocation.
+
+    ``impl``: ``"xla"`` (native MXU — the performance path) or
+    ``"hwmodel"`` (the RRAM crossbar behavioural model: 8-bit operands on
+    128x128 tiles through a 5-bit ADC — the paper-table accuracy oracle).
+    """
+
+    impl: str = "xla"
+    crossbar: CrossbarSpec = DEFAULT_SPEC
+    ranging: str = "calibrated"  # hwmodel ADC ranging: calibrated | fullscale
+    block_m: int = 128
+    interpret: Optional[bool] = None
+
+    op = "matmul"
+
+    def __post_init__(self) -> None:
+        if self.ranging not in ("calibrated", "fullscale"):
+            raise ValueError(
+                f"ranging must be 'calibrated' or 'fullscale', got {self.ranging!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanSpec:
+    """One fused SSD chunk-scan invocation (mamba2 mixer).
+
+    Not part of the paper's softmax engine, but registered through the same
+    dispatch layer so the interpret-flag and backend-sweep machinery covers
+    every Pallas kernel in the repo.
+    """
+
+    impl: str = "pallas"
+    chunk: int = 128
+    interpret: Optional[bool] = None
+
+    op = "ssd_scan"
+
+    def __post_init__(self) -> None:
+        if self.chunk <= 0:
+            raise ValueError(f"chunk must be > 0, got {self.chunk}")
+
+
+Spec = Union[SoftmaxSpec, AttentionSpec, MatmulSpec, ScanSpec]
+
+
+def spec_json(spec: Spec) -> Dict[str, Any]:
+    """JSON-serializable dict of a spec (benchmark emission, logging)."""
+    out: Dict[str, Any] = {"op": spec.op}
+    for f in dataclasses.fields(spec):
+        v = getattr(spec, f.name)
+        if dataclasses.is_dataclass(v) and not isinstance(v, type):
+            v = dataclasses.asdict(v)
+        elif isinstance(v, tuple):
+            v = list(v)
+        out[f.name] = v
+    return out

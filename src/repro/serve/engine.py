@@ -48,8 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops
 from repro.configs.base import ModelConfig
-from repro.core.star_softmax import star_softmax
 from repro.models.registry import build_model
 from repro.models.transformer import DecoderLM
 from repro.serve.scheduler import Request, Slot, SlotScheduler
@@ -77,8 +77,9 @@ def sample_token(
     if t <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / t
-    if serve_cfg.star_sampling and cfg.softmax_kind != "exact":
-        probs = star_softmax(scaled, cfg.softmax_format, mode=cfg.softmax_mode)
+    spec = cfg.softmax_spec
+    if serve_cfg.star_sampling and spec.kind != "exact":
+        probs = ops.softmax(scaled, spec)
         return jax.random.categorical(
             key, jnp.log(jnp.maximum(probs, 1e-20)), axis=-1
         ).astype(jnp.int32)
