@@ -1,6 +1,6 @@
-"""Serving throughput: lockstep batching vs continuous batching.
+"""Serving throughput: lockstep vs continuous vs paged-KV continuous.
 
-A Poisson arrival trace of mixed-length requests is served two ways:
+A Poisson arrival trace of mixed-length requests is served three ways:
 
 * **lockstep** — requests are grouped into fixed batches of ``slots`` in
   arrival order; each batch prefills together (prompts right-padded to the
@@ -10,29 +10,32 @@ A Poisson arrival trace of mixed-length requests is served two ways:
 * **continuous** — the slot-pool engine admits each request as it arrives
   (1 engine tick = 1 time unit of the trace) and retires it the moment its
   own budget is done, so lanes never idle on a co-tenant's schedule.
+* **paged** — the same continuous engine over the block-pool KV cache
+  (DESIGN.md §8): memory is allocated in ``kv_block_size``-token blocks as
+  requests grow, so peak KV bytes track *live tokens* instead of
+  ``slots * max_len``.  Greedy decode is token-identical to the dense
+  path, so steps/makespan match and the delta is purely memory.
 
-Three views, printed as ``name,value,derived`` CSV (benchmarks/run.py
-idiom):
+Views, printed as ``name,value,derived`` CSV (benchmarks/run.py idiom):
 
-1. ``decode_steps`` — pool-wide decode steps executed (device work; both
-   engines step the same [slots]-wide jitted decode, so the ratio is the
-   device-level *decode* speedup, independent of host dispatch noise).
-   Prefill passes are reported separately on each line: continuous pays
-   one batch-1 prefill per request, lockstep one batched prefill per
-   group — they are different-shaped programs, so they are counted, not
-   folded into the ratio.
+1. ``decode_steps`` — pool-wide decode steps executed (device work).
+   Prefill passes are reported separately on each line.
 2. ``makespan`` — completion time in trace units (1 decode step = 1 unit,
    prefill = 1 unit), *including* arrival waits: the latency picture.
-3. ``toks_per_s`` — measured wall-clock useful tokens/sec.  CPU smoke
-   numbers: host Python dispatch dominates at this scale (the continuous
-   engine prefills request-by-request), so treat the wall numbers as an
-   end-to-end liveness check and the step/makespan columns as the result.
+3. ``toks_per_s`` — measured wall-clock useful tokens/sec (CPU smoke:
+   host dispatch dominates; treat as a liveness check).
+4. ``peak_kv_bytes`` — what an allocator must pin: the dense engines pin
+   their full pool; the paged engine pins its peak allocated blocks.
+   Per-tick block-pool occupancy lands in the ``--json`` record so
+   BENCH_*.json can track memory as well as speed.
 
-    PYTHONPATH=src python -m benchmarks.serve_throughput
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--json out.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -77,16 +80,22 @@ def run_lockstep(cfg, params, trace, prompts, slots, max_len):
         prefills += 1
         clock = max(clock, max(r["arrival"] for r in batch)) + 1 + (gen - 1)
     dt = time.perf_counter() - t0
-    return {"tokens": useful, "steps": steps, "prefills": prefills,
-            "makespan": clock, "wall": dt}
+    return {"engine": "lockstep", "tokens": useful, "steps": steps,
+            "prefills": prefills, "makespan": clock, "wall": dt}
 
 
-def run_continuous(cfg, params, trace, prompts, slots, max_len):
+def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
+                   kv_layout="dense", kv_block_size=16, kv_pool_blocks=None):
     from repro.serve.engine import ContinuousBatchingEngine, ContinuousConfig
 
     eng = ContinuousBatchingEngine(
-        cfg, params, ContinuousConfig(num_slots=slots, max_len=max_len))
+        cfg, params,
+        ContinuousConfig(num_slots=slots, max_len=max_len,
+                         kv_layout=kv_layout, kv_block_size=kv_block_size,
+                         kv_pool_blocks=kv_pool_blocks))
     useful = 0
+    occupancy = []  # per-tick allocated blocks (paged) for the JSON record
+    outputs = {}
     t0 = time.perf_counter()
     i = 0
     tick = 0
@@ -97,14 +106,32 @@ def run_continuous(cfg, params, trace, prompts, slots, max_len):
             useful += trace[i]["gen"]
             i += 1
         eng.step()
+        if eng.kv_layout == "paged":
+            occupancy.append(eng.block_pool.used_blocks)
         tick += 1
     dt = time.perf_counter() - t0
-    return {"tokens": useful, "steps": eng.ticks, "prefills": len(trace),
-            "makespan": float(tick), "wall": dt,
-            "util": useful / max(eng.ticks * slots, 1)}
+    outputs.update(eng.scheduler.finished)
+    st = eng.kv_stats()
+    # each preemption re-admission runs one extra prefill pass
+    prefills = len(trace) + st.get("preemptions", 0)
+    out = {"engine": f"continuous[{eng.kv_layout}]", "tokens": useful,
+           "steps": eng.ticks, "prefills": prefills,
+           "makespan": float(tick), "wall": dt,
+           "util": useful / max(eng.ticks * slots, 1),
+           "peak_kv_bytes": st["peak_kv_bytes"],
+           "kv_bytes_capacity": st["kv_bytes_capacity"],
+           "outputs": outputs}
+    if eng.kv_layout == "paged":
+        out["block_occupancy_per_tick"] = occupancy
+        out["peak_used_blocks"] = st["peak_used_blocks"]
+        out["total_blocks"] = st["total_blocks"]
+        out["preemptions"] = st["preemptions"]
+        out["kv_block_size"] = kv_block_size
+    return out
 
 
-def main(n_requests: int = 12, slots: int = 4):
+def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
+         json_path: str | None = None):
     import jax
 
     from repro.configs import get_smoke_config
@@ -131,12 +158,56 @@ def main(n_requests: int = 12, slots: int = 4):
           f"toks_per_s={cb['tokens'] / cb['wall']:.1f} "
           f"slot_util={cb['util']:.2f}")
 
+    pg = run_continuous(cfg, params, trace, prompts, slots, max_len,
+                        kv_layout="paged", kv_block_size=kv_block_size)
+    print(f"serve_paged_decode_steps,{pg['steps']},"
+          f"prefills={pg['prefills']} makespan={pg['makespan']:.0f} "
+          f"toks_per_s={pg['tokens'] / pg['wall']:.1f} "
+          f"peak_blocks={pg['peak_used_blocks']}/{pg['total_blocks']} "
+          f"preemptions={pg['preemptions']}")
+
     print(f"serve_continuous_step_speedup,{lk['steps'] / cb['steps']:.2f}x,"
           f"device_decode_work requests={n_requests} slots={slots}")
-    print(f"serve_continuous_makespan_speedup,{lk['makespan'] / cb['makespan']:.2f}x,"
-          f"trace_time_incl_arrivals")
+    print(f"serve_continuous_makespan_speedup,"
+          f"{lk['makespan'] / cb['makespan']:.2f}x,trace_time_incl_arrivals")
+    # the paged deltas: memory strictly below dense at parity makespan.
+    # Parity is a hard invariant (DESIGN.md §8) — fail loudly, don't just
+    # print, so scripted runs catch a paged-vs-dense divergence.
+    parity = all(pg["outputs"][u] == cb["outputs"][u] for u in cb["outputs"])
+    assert parity, "paged greedy output diverged from the dense engine"
+    print(f"serve_paged_kv_bytes_vs_dense,"
+          f"{pg['peak_kv_bytes'] / cb['peak_kv_bytes']:.2f}x,"
+          f"peak {pg['peak_kv_bytes']} vs dense {cb['peak_kv_bytes']} bytes")
+    print(f"serve_paged_makespan_parity,"
+          f"{cb['makespan'] / pg['makespan']:.2f}x,"
+          f"token_parity={parity}")
+
+    if json_path:
+        record = {
+            "bench": "serve_throughput",
+            "requests": n_requests,
+            "slots": slots,
+            "max_len": max_len,
+            "lockstep": lk,
+            "continuous": cb,
+            "paged": pg,
+            "paged_token_parity": parity,
+        }
+        for eng_rec in (cb, pg):
+            eng_rec.pop("outputs", None)  # token lists stay out of the record
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, default=float)
+        print(f"wrote {json_path}")
     return True
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full record (incl. per-tick block-pool "
+                    "occupancy) as JSON")
+    args = ap.parse_args()
+    main(args.requests, args.slots, args.kv_block_size, args.json)

@@ -15,7 +15,7 @@ from typing import Optional, Tuple
 
 from repro.core.attention import SoftmaxConfig
 from repro.core.fixedpoint import FixedPointFormat
-from repro.ops.specs import AttentionSpec, SoftmaxSpec
+from repro.ops.specs import AttentionSpec, PagedAttentionSpec, SoftmaxSpec
 
 # legacy attn_impl names -> registry impls (new names pass through)
 _ATTN_IMPLS = {"naive": "reference", "blocked": "xla", "flash": "pallas"}
@@ -172,6 +172,26 @@ class ModelConfig:
             updates["block_k"] = min(self.attn_block_size, 128)
             updates["block_kv"] = self.attn_block_size
         return dataclasses.replace(self.attention, **updates)
+
+    @property
+    def paged_attention_spec(self) -> PagedAttentionSpec:
+        """The paged-decode contract derived from the attention spec.
+
+        The backend follows the attention impl where the mapping is
+        meaningful (reference/xla/pallas); the ``"paged"`` marker impl and
+        anything custom fall back to ``"xla"`` — the marker selects the
+        *cache layout*, the paged op picks its own math backend (overridable
+        via ``ops.use(paged_attention=...)``).
+        """
+        base = self.attention_spec
+        impl = base.impl if base.impl in ("reference", "xla", "pallas") else "xla"
+        return PagedAttentionSpec(
+            impl=impl,
+            softmax=base.softmax,
+            block_q=base.block_q,
+            block_k=base.block_k,
+            interpret=base.interpret,
+        )
 
     @property
     def softmax_config(self) -> SoftmaxConfig:

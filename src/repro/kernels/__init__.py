@@ -1,3 +1,23 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+import warnings
+
+# Shims that have already warned this process (kernels/*/ops.py are
+# deprecated adapters onto the repro.ops registry; each warns exactly once
+# per process — tests reset this set to re-assert the warning).
+_SHIM_WARNED: set = set()
+
+
+def warn_shim(name: str, replacement: str) -> None:
+    """Emit the deprecation warning for shim ``name`` once per process."""
+    if name in _SHIM_WARNED:
+        return
+    _SHIM_WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated: call {replacement} instead "
+        "(the shim builds a spec and dispatches through the registry)",
+        DeprecationWarning,
+        stacklevel=3,
+    )

@@ -26,6 +26,12 @@ def crossbar_matmul_op(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """x [M, K] @ w [K, N] through the RRAM crossbar behavioural model."""
+    from repro.kernels import warn_shim
+
+    warn_shim(
+        "repro.kernels.crossbar_matmul.ops.crossbar_matmul_op",
+        "repro.ops.matmul with a MatmulSpec(impl='hwmodel')",
+    )
     return ops.matmul(
         x,
         w,

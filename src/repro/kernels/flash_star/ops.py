@@ -31,6 +31,12 @@ def flash_star_op(
     pv_int8: bool = False,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
+    from repro.kernels import warn_shim
+
+    warn_shim(
+        "repro.kernels.flash_star.ops.flash_star_op",
+        "repro.ops.attention with an AttentionSpec(impl='pallas')",
+    )
     softmax = (
         ops.SoftmaxSpec(kind="exact")
         if fmt is None

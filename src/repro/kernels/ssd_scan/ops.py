@@ -23,6 +23,12 @@ def ssd_scan_op(
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused SSD: (y [B,T,H,P], final state [B,H,N,P])."""
+    from repro.kernels import warn_shim
+
+    warn_shim(
+        "repro.kernels.ssd_scan.ops.ssd_scan_op",
+        "repro.ops.ssd_scan with a ScanSpec(impl='pallas')",
+    )
     return ops.ssd_scan(
         xdt, a, bmat, cmat, ops.ScanSpec(impl="pallas", chunk=chunk, interpret=interpret)
     )

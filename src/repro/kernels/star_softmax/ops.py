@@ -25,6 +25,12 @@ def star_softmax_op(
     use_mxu_lut: bool = False,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
+    from repro.kernels import warn_shim
+
+    warn_shim(
+        "repro.kernels.star_softmax.ops.star_softmax_op",
+        "repro.ops.softmax with a SoftmaxSpec(impl='pallas')",
+    )
     if use_histogram and use_mxu_lut:
         # The spec contract has three *exclusive* dataflow modes; the old
         # kernel flags were orthogonal.  Preserve the legacy combination

@@ -150,6 +150,8 @@ def _run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Optional[str]
     def costs_of(compiled):
         out = {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "coll_detail": {}}
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # jax <= 0.4.x: one dict per device
+            ca = ca[0] if ca else {}
         out["flops"] = float(ca.get("flops", 0.0))
         out["bytes"] = float(ca.get("bytes accessed", 0.0))
         coll = collective_bytes(compiled.as_text())

@@ -8,6 +8,10 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
       --engine continuous --requests 8 --slots 4 --gen 16
 
+  # paged KV cache (block-pool allocator; DESIGN.md §8)
+  PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
+      --engine continuous --attn-impl paged --kv-block-size 16
+
 Backend selection goes through the ``repro.ops`` registry: the config's
 specs pick the defaults, ``--attn-impl`` / ``--softmax-impl`` retarget
 every dispatch via ``ops.use(...)``, and Pallas interpret-vs-compile is
@@ -66,7 +70,10 @@ def run_continuous(args, cfg, params) -> int:
     eng = ContinuousBatchingEngine(
         cfg, params,
         ContinuousConfig(num_slots=args.slots, max_len=max_len,
-                         temperature=args.temperature),
+                         temperature=args.temperature,
+                         kv_layout=args.kv_layout,
+                         kv_block_size=args.kv_block_size,
+                         kv_pool_blocks=args.kv_pool_blocks),
     )
     rng = np.random.default_rng(0)
     total = 0
@@ -86,7 +93,12 @@ def run_continuous(args, cfg, params) -> int:
     dt = time.perf_counter() - t0
     print(f"served {args.requests} requests / {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s) over {eng.ticks} decode ticks "
-          f"({args.slots} slots)")
+          f"({args.slots} slots, kv={eng.kv_layout})")
+    if eng.kv_layout == "paged":
+        st = eng.kv_stats()
+        print(f"paged kv: peak {st['peak_used_blocks']}/{st['total_blocks']} "
+              f"blocks ({st['peak_kv_bytes'] / 1e6:.2f} MB), "
+              f"{st['preemptions']} preemptions")
     first = done[min(done)]
     print("sample:", first[:16])
     return 0
@@ -106,7 +118,24 @@ def main() -> int:
     ap.add_argument("--max-len", type=int, default=None)
     ap.add_argument(
         "--attn-impl", default=None, metavar="IMPL",
-        help="force an attention backend (registry impl: reference|xla|pallas)",
+        help="force an attention backend (registry impl: reference|xla|pallas; "
+        "'paged' additionally flips the continuous engine to the block-pool "
+        "KV cache)",
+    )
+    ap.add_argument(
+        "--kv-layout", choices=("dense", "paged"), default="dense",
+        help="continuous-engine KV cache layout (--attn-impl paged also "
+        "selects 'paged' via the ops override)",
+    )
+    ap.add_argument(
+        "--kv-block-size", type=int, default=16,
+        help="paged KV: tokens per cache block",
+    )
+    ap.add_argument(
+        "--kv-pool-blocks", type=int, default=None,
+        help="paged KV: usable blocks in the pool (default: dense-equivalent "
+        "capacity slots * ceil(cache_len / block_size), where cache_len is "
+        "max_len clamped to the arch's sliding window)",
     )
     ap.add_argument(
         "--softmax-impl", default=None, metavar="IMPL",

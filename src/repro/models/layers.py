@@ -205,8 +205,16 @@ def attention_block(
     xkv: Optional[jax.Array] = None,  # cross-attention memory
     kv_valid_len: Optional[jax.Array] = None,
     use_rope: bool = True,
+    paged_cache_t: Optional[int] = None,  # paged cache: logical row count
 ) -> Tuple[jax.Array, Optional[Params], Tuple[jax.Array, jax.Array]]:
     """Self- or cross-attention with optional KV cache.
+
+    The cache comes in three shapes: a scalar-``len`` decode cache, a
+    per-slot pool (``len`` is a ``[B]`` vector), and a *paged* pool —
+    K/V are ``[num_blocks, block_size, Hkv, D]`` page pools plus a
+    ``"tables"`` entry of per-slot block tables (``repro.serve.paged``),
+    with ``paged_cache_t`` carrying the logical per-slot row count (a
+    static int: it sizes the gathered view and the ring modulo).
 
     Returns ``(out, cache', (k, v))`` — the fresh (rotated) K/V of this call
     so prefill can prime caches without recomputing projections."""
@@ -245,6 +253,34 @@ def attention_block(
         q = wlc(q, ("batch", "seq", "heads", None))
     q_offset: jax.Array | int = 0
     new_cache = None
+    if cache is not None and "tables" in cache:
+        # Paged slot pool (DESIGN.md §8): K/V live in a flat block pool,
+        # per-slot block tables give each slot a ragged logical buffer.
+        # Same contract as the dense per-slot path below — write the fresh
+        # token at the slot's own depth, mask by per-slot valid length —
+        # but the write is a block-indirected scatter and the read is a
+        # table gather inside the paged_attention op.
+        assert tq == 1, "paged cache only supports 1-token decode"
+        assert paged_cache_t is not None, "paged cache requires paged_cache_t"
+        cache_t = paged_cache_t
+        bs = cache["k"].shape[1]
+        tables = cache["tables"]
+        ring = sliding_window is not None and cache_t <= sliding_window
+        idx = cache["len"] % cache_t if ring else cache["len"]
+        # free slots' counters regrow past their (scratch-only) tables; the
+        # clip keeps the gather in range, their writes land in scratch
+        col = jnp.clip(idx // bs, 0, tables.shape[1] - 1)
+        blk = jnp.take_along_axis(tables, col[:, None], axis=1)[:, 0]
+        ck = cache["k"].at[blk, idx % bs].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, idx % bs].set(v[:, 0].astype(cache["v"].dtype))
+        new_len = cache["len"] + 1
+        new_cache = {"k": ck, "v": cv, "len": new_len}
+        kvl = jnp.minimum(new_len, cache_t) if ring else new_len
+        spec = dataclasses.replace(cfg.paged_attention_spec, block_size=bs)
+        ctx = ops.paged_attention(
+            q, ck, cv, tables, spec, kv_valid_len=kvl, kv_len=cache_t,
+        )
+        return ctx.reshape(b, tq, -1), new_cache, (k, v)
     if cache is not None:
         cache_t = cache["k"].shape[1]
         # Per-slot serving pool: cache["len"] is a [B] vector — every slot

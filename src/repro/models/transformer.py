@@ -79,13 +79,14 @@ class DecoderLM:
         positions: Optional[jax.Array],
         cache: Optional[Params],
         kv_valid_len: Optional[jax.Array],
+        paged_cache_t: Optional[int] = None,
     ) -> Tuple[jax.Array, Optional[Params], Tuple[jax.Array, jax.Array]]:
         cfg = self.cfg
         a, new_cache, kv = L.attention_block(
             bp["attn"], L.rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg,
             causal=True, positions=positions,
             sliding_window=cfg.sliding_window, cache=cache,
-            kv_valid_len=kv_valid_len,
+            kv_valid_len=kv_valid_len, paged_cache_t=paged_cache_t,
         )
         h = h + L.attention_out(bp["attn"], a, cfg)
         hn = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
@@ -284,6 +285,128 @@ class DecoderLM:
             "len": pool["len"].at[slot].set(0),
             "pos": pool["pos"].at[slot].set(0),
         }
+
+    # -- paged slot pool (block-table KV cache) -------------------------------
+    #
+    # The paged pool replaces each slot's dense [T] KV row with a block
+    # table over a flat [num_blocks, block_size] page pool (DESIGN.md §8;
+    # host allocator: repro.serve.paged.BlockPool).  Logical row i of a
+    # slot lives at (table[i // bs], i % bs), so gathering a table
+    # reproduces the dense row bit-for-bit — paged greedy decode is
+    # token-identical to the dense pool by construction.
+
+    def init_paged_cache(
+        self, num_blocks: int, block_size: int, num_slots: int
+    ) -> Params:
+        """Zeroed page pool: KV [L, N, bs, Hkv, D], per-slot len/pos."""
+        cfg = self.cfg
+        kv = (
+            cfg.num_layers, num_blocks, block_size,
+            cfg.num_kv_heads, cfg.resolved_head_dim,
+        )
+        dt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "layers": {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)},
+            "len": jnp.zeros((num_slots,), jnp.int32),
+            "pos": jnp.zeros((num_slots,), jnp.int32),
+        }
+
+    def write_slot_paged(
+        self, pool: Params, cache: Params, slot: int, table: jax.Array
+    ) -> Params:
+        """Scatter a batch-1 prefill cache into the blocks of ``table``.
+
+        The prefill rows are zero-padded up to the block grid, so a
+        recycled block is overwritten *wholesale* — no stale rows from its
+        previous owner survive inside the allocated table (rows past the
+        grid are scratch and masked).  ``table`` is the [W] int32 block-id
+        row the host allocator assigned to this request.
+        """
+        k1 = cache["layers"]["k"]
+        pk = pool["layers"]["k"]
+        if k1.shape[1] != 1:
+            raise ValueError(f"write_slot_paged expects a batch-1 cache, got {k1.shape}")
+        bs = pk.shape[2]
+        w = table.shape[0]
+        t1 = k1.shape[2]
+        if t1 > w * bs:
+            raise ValueError(
+                f"prefill cache has {t1} rows but the table holds "
+                f"{w} blocks x {bs} = {w * bs}"
+            )
+        pad = [(0, 0), (0, 0), (0, w * bs - t1), (0, 0), (0, 0)]
+
+        def blocks(arr):  # [L, 1, T1, H, D] -> [L, W, bs, H, D]
+            a = jnp.pad(arr, pad)[:, 0]
+            lyr, _, h, d = a.shape
+            return a.reshape(lyr, w, bs, h, d)
+
+        return {
+            "layers": {
+                "k": pk.at[:, table].set(blocks(k1).astype(pk.dtype)),
+                "v": pool["layers"]["v"].at[:, table].set(
+                    blocks(cache["layers"]["v"]).astype(pk.dtype)
+                ),
+            },
+            "len": pool["len"].at[slot].set(cache["len"].astype(jnp.int32)),
+            "pos": pool["pos"].at[slot].set(cache["pos"].astype(jnp.int32)),
+        }
+
+    def copy_block(self, pool: Params, src: jax.Array, dst: jax.Array) -> Params:
+        """Copy one KV block (all layers) — the device half of the
+        allocator's copy-on-fork hook (``BlockPool.ensure_writable``)."""
+        pk, pv = pool["layers"]["k"], pool["layers"]["v"]
+        return {
+            "layers": {
+                "k": pk.at[:, dst].set(pk[:, src]),
+                "v": pv.at[:, dst].set(pv[:, src]),
+            },
+            "len": pool["len"],
+            "pos": pool["pos"],
+        }
+
+    def decode_step_paged(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jax.Array,
+        block_tables: jax.Array,  # [S, W] int32 (host allocator state)
+        *,
+        cache_t: int,
+    ) -> Tuple[jax.Array, Params]:
+        """One paged token step.  tokens [S, 1] -> (logits [S, 1, V], cache').
+
+        ``block_tables`` is per-tick host input (the allocator appends
+        blocks between ticks); ``cache_t`` is the static logical per-slot
+        row count (= ``cache_len(max_len)``) — it sizes the gathered view
+        and the sliding-window ring modulo.
+        """
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        pos0 = cache.get("pos", cache["len"])
+        pos = pos0.astype(jnp.int32)[:, None]  # [S, 1]
+        if cfg.mrope_sections:
+            pos = jnp.stack([pos, pos, pos], axis=-1)
+
+        def body(carry, xs):
+            out, new_c, _ = self._block(
+                xs["p"], carry, positions=pos,
+                cache={**xs["c"], "len": cache["len"], "tables": block_tables},
+                kv_valid_len=None, paged_cache_t=cache_t,
+            )
+            return out, {"k": new_c["k"], "v": new_c["v"]}
+
+        h, new_layer_caches = L.scan_blocks(
+            body, x, {"p": params["blocks"], "c": cache["layers"]}
+        )
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h, cfg, params["embed"])
+        new_cache = {
+            "layers": {"k": new_layer_caches["k"], "v": new_layer_caches["v"]},
+            "len": cache["len"] + 1,
+            "pos": cache.get("pos", cache["len"]) + 1,
+        }
+        return logits, new_cache
 
     def prefill(
         self,

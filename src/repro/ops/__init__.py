@@ -20,10 +20,12 @@ entries (:func:`register`), not cross-cutting edits.
 from repro.ops.dispatch import (  # noqa: F401
     DEFAULT_ATTENTION,
     DEFAULT_MATMUL,
+    DEFAULT_PAGED_ATTENTION,
     DEFAULT_SOFTMAX,
     DEFAULT_SSD_SCAN,
     attention,
     matmul,
+    paged_attention,
     resolve,
     softmax,
     ssd_scan,
@@ -49,6 +51,7 @@ from repro.ops.registry import (  # noqa: F401
 from repro.ops.specs import (  # noqa: F401
     AttentionSpec,
     MatmulSpec,
+    PagedAttentionSpec,
     ScanSpec,
     SoftmaxSpec,
     Spec,

@@ -24,10 +24,18 @@ import jax
 from repro.ops import registry
 from repro.ops.platform import resolve_interpret
 from repro.ops.registry import Backend, OpDispatchError
-from repro.ops.specs import AttentionSpec, MatmulSpec, ScanSpec, SoftmaxSpec, Spec
+from repro.ops.specs import (
+    AttentionSpec,
+    MatmulSpec,
+    PagedAttentionSpec,
+    ScanSpec,
+    SoftmaxSpec,
+    Spec,
+)
 
 DEFAULT_SOFTMAX = SoftmaxSpec()
 DEFAULT_ATTENTION = AttentionSpec()
+DEFAULT_PAGED_ATTENTION = PagedAttentionSpec()
 DEFAULT_MATMUL = MatmulSpec()
 DEFAULT_SSD_SCAN = ScanSpec()
 
@@ -93,6 +101,41 @@ def attention(
     )
     return backend.fn(
         spec, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len, scale=scale
+    )
+
+
+def paged_attention(
+    q: jax.Array,  # [S, Tq, Hq, D] (decode: Tq == 1)
+    k_pages: jax.Array,  # [num_blocks, block_size, Hkv, D]
+    v_pages: jax.Array,  # [num_blocks, block_size, Hkv, D]
+    block_tables: jax.Array,  # [S, W] int32 block ids per sequence
+    spec: Optional[PagedAttentionSpec] = None,
+    *,
+    kv_valid_len: jax.Array,  # [S] ragged valid prefix per sequence
+    kv_len: Optional[int] = None,  # logical gathered length (<= W * block_size)
+    scale: Optional[float] = None,
+    **overrides: Any,
+) -> jax.Array:
+    """Paged-KV decode attention: gather each sequence's blocks through its
+    table, attend over the ragged valid prefix.  Returns ``[S, Tq, Hq, D]``.
+
+    ``kv_len`` trims the gathered buffer to the logical cache length when
+    the block grid overshoots it (``W * block_size`` rows gathered, only
+    ``kv_len`` meaningful) so the operands — and hence the numerics — match
+    the dense per-slot cache exactly.
+    """
+    backend, spec = resolve(
+        spec if spec is not None else DEFAULT_PAGED_ATTENTION, **overrides
+    )
+    return backend.fn(
+        spec,
+        q,
+        k_pages,
+        v_pages,
+        block_tables,
+        kv_valid_len=kv_valid_len,
+        kv_len=kv_len,
+        scale=scale,
     )
 
 

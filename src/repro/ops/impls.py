@@ -40,7 +40,13 @@ from repro.kernels.flash_star.kernel import flash_star_attention
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
 from repro.kernels.star_softmax.kernel import star_softmax_pallas
 from repro.ops.registry import CapabilityError, register
-from repro.ops.specs import AttentionSpec, MatmulSpec, ScanSpec, SoftmaxSpec
+from repro.ops.specs import (
+    AttentionSpec,
+    MatmulSpec,
+    PagedAttentionSpec,
+    ScanSpec,
+    SoftmaxSpec,
+)
 
 # ---------------------------------------------------------------------------
 # softmax
@@ -251,6 +257,116 @@ register(
     _attention_pallas,
     capabilities={"softmax.kind": ("star", "exact")},
     description="fused flash_star TPU kernel (kernels.flash_star)",
+)
+register(
+    "attention",
+    "paged",
+    _attention_xla,
+    capabilities={"pv_int8": (False,)},
+    description="paged KV-cache marker impl: dense invocations (prefill, "
+    "lockstep) run the xla pipeline; the serve stack reads this impl as "
+    "'use the block-pool cache' and routes decode through the "
+    "paged_attention op (ops.use(attention='paged') flips both at once)",
+)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (block-pool KV cache decode — DESIGN.md §8)
+
+
+def _gather_pages(
+    k_pages: jax.Array,  # [N, bs, Hkv, D]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, W] int32
+    kv_len: Optional[int],
+) -> tuple:
+    """Concatenate each sequence's blocks: -> dense [S, kv_len, Hkv, D].
+
+    Logical row ``i`` lives at ``(table[i // bs], i % bs)`` (the
+    serve.paged layout invariant), so reshaping the gathered blocks
+    reproduces the dense per-slot cache row exactly; rows past ``kv_len``
+    (block-grid overshoot) are dropped, rows past the caller's
+    ``kv_valid_len`` are masked downstream.
+    """
+    s, w = block_tables.shape
+    n, bs, hkv, d = k_pages.shape
+    kd = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
+    vd = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    kd = kd.reshape(s, w * bs, hkv, d)
+    vd = vd.reshape(s, w * bs, hkv, d)
+    if kv_len is not None and kv_len < w * bs:
+        kd = kd[:, :kv_len]
+        vd = vd[:, :kv_len]
+    return kd, vd
+
+
+def _paged_dense_spec(spec: PagedAttentionSpec, impl: str) -> AttentionSpec:
+    # Ragged valid lengths subsume causality for decode (DESIGN.md §6):
+    # the gathered call is causal=False + kv_valid_len, like the dense
+    # per-slot path.
+    return AttentionSpec(
+        impl=impl,
+        softmax=spec.softmax,
+        causal=False,
+        ragged=True,
+        block_q=spec.block_q,
+        block_k=spec.block_k,
+        interpret=spec.interpret,
+    )
+
+
+def _make_paged_backend(impl: str, dense_fn):
+    """Adapter shared by every paged backend: gather the page pool through
+    the block tables (in XLA — scatter/gather is not MXU work), then hand
+    the dense view plus the ragged valid lengths to the matching dense
+    attention backend (the pallas one packs them into the fused kernel's
+    info vector)."""
+
+    def fn(
+        spec: PagedAttentionSpec,
+        q: jax.Array,
+        k_pages: jax.Array,
+        v_pages: jax.Array,
+        block_tables: jax.Array,
+        *,
+        kv_valid_len: jax.Array,
+        kv_len: Optional[int] = None,
+        scale: Optional[float] = None,
+    ) -> jax.Array:
+        kd, vd = _gather_pages(k_pages, v_pages, block_tables, kv_len)
+        return dense_fn(
+            _paged_dense_spec(spec, impl),
+            q,
+            kd,
+            vd,
+            kv_valid_len=kv_valid_len,
+            scale=scale,
+        )
+
+    return fn
+
+
+register(
+    "paged_attention",
+    "reference",
+    _make_paged_backend("reference", _attention_reference),
+    description="block-table gather + whole-operand ragged decode "
+    "(core.attention)",
+)
+register(
+    "paged_attention",
+    "xla",
+    _make_paged_backend("xla", _attention_xla),
+    description="block-table gather via jnp.take + the online-blocked "
+    "dense pipeline over ragged valid lengths",
+)
+register(
+    "paged_attention",
+    "pallas",
+    _make_paged_backend("pallas", _attention_pallas),
+    capabilities={"softmax.kind": ("star", "exact")},
+    description="block-table gather + fused flash_star kernel with the "
+    "ragged-length info vector (kernels.flash_star)",
 )
 
 

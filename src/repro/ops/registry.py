@@ -141,7 +141,14 @@ _OVERRIDE_FRAMES: ContextVar[Tuple[Mapping[str, Any], ...]] = ContextVar(
     "repro_ops_overrides", default=()
 )
 
-_OVERRIDE_KEYS = ("softmax", "attention", "matmul", "ssd_scan", "interpret")
+_OVERRIDE_KEYS = (
+    "softmax",
+    "attention",
+    "paged_attention",
+    "matmul",
+    "ssd_scan",
+    "interpret",
+)
 
 
 @contextlib.contextmanager

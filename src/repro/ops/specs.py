@@ -140,6 +140,42 @@ class AttentionSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PagedAttentionSpec:
+    """One paged-attention decode invocation over a block-pool KV cache.
+
+    The operands are a KV *page pool* (``[num_blocks, block_size, Hkv, D]``)
+    plus per-sequence block tables (``[S, W]`` int32 — see
+    ``repro.serve.paged``): every backend gathers each sequence's blocks
+    through its table and decodes over the ragged per-sequence valid
+    lengths.  Masked softmax makes the result identical to the dense
+    per-slot path, which is what the serve parity suite asserts.
+
+    ``impl``: ``"reference"`` (gather + whole-operand attention),
+    ``"xla"`` (gather via ``jnp.take`` + the online-blocked dense
+    pipeline), ``"pallas"`` (gather + the fused ``flash_star`` kernel with
+    the ragged-length info vector).
+
+    ``block_size`` is the declared tokens-per-block default; backends
+    trust the runtime page shape, the field exists so the spec fully
+    records the configuration (benchmark emission, jit cache keys).
+    """
+
+    impl: str = "xla"
+    softmax: SoftmaxSpec = SoftmaxSpec()
+    block_size: int = 16  # tokens per KV block
+    block_q: int = 128  # pallas: query tile
+    block_k: int = 128  # pallas: KV tile
+    interpret: Optional[bool] = None
+
+    op = "paged_attention"
+
+    def __post_init__(self) -> None:
+        for field in ("block_size", "block_q", "block_k"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be > 0, got {getattr(self, field)}")
+
+
+@dataclasses.dataclass(frozen=True)
 class MatmulSpec:
     """One matmul invocation.
 
@@ -183,7 +219,7 @@ class ScanSpec:
             raise ValueError(f"chunk must be > 0, got {self.chunk}")
 
 
-Spec = Union[SoftmaxSpec, AttentionSpec, MatmulSpec, ScanSpec]
+Spec = Union[SoftmaxSpec, AttentionSpec, PagedAttentionSpec, MatmulSpec, ScanSpec]
 
 
 def spec_json(spec: Spec) -> Dict[str, Any]:

@@ -33,6 +33,15 @@ Slot lifecycle (one ``step()`` tick)::
              free-slot counters regrow with the pool-wide tick — the
              scheduler, not len, is the source of truth for occupancy)
 
+The engine offers two KV layouts (``ContinuousConfig.kv_layout``): the
+dense per-slot pool above, and the **paged** block-pool cache (DESIGN.md
+§8, ``serve/paged.py``) where admission allocates fixed-size token blocks,
+decode appends blocks as slots cross block boundaries, and pool exhaustion
+*preempts* the latest-admitted slot — its blocks return to the free list
+and its request requeues at the front with generated tokens preserved.
+``ops.use(attention="paged")`` (or an ``attn_impl="paged"`` config) flips
+the layout without touching engine construction.
+
 Greedy continuous-batching output is bit-identical to sequential
 ``ServeEngine.generate`` calls for the same prompts (tests/test_serve.py);
 with temperature, each request gets its own PRNG stream (folded from its
@@ -52,6 +61,8 @@ from repro import ops
 from repro.configs.base import ModelConfig
 from repro.models.registry import build_model
 from repro.models.transformer import DecoderLM
+from repro.ops.registry import active_overrides
+from repro.serve.paged import SCRATCH_BLOCK, BlockPool
 from repro.serve.scheduler import Request, Slot, SlotScheduler
 
 PyTree = Any
@@ -133,6 +144,16 @@ class ContinuousConfig:
     max_len: int = 512  # per-slot cache capacity (prompt + generation)
     temperature: float = 0.0
     star_sampling: bool = True
+    # Paged KV cache (DESIGN.md §8).  "dense" keeps the PR-1 per-slot
+    # buffers; "paged" stores K/V in fixed-size token blocks behind
+    # per-request block tables (serve/paged.py) so memory tracks live
+    # tokens.  ``ops.use(attention="paged")`` — or a config whose
+    # attention impl is "paged" — flips the layout too.
+    kv_layout: str = "dense"  # dense | paged
+    kv_block_size: int = 16  # tokens per KV block
+    # usable blocks in the pool (scratch excluded); None sizes it to the
+    # dense-equivalent capacity num_slots * ceil(cache_len / block_size)
+    kv_pool_blocks: Optional[int] = None
 
     def as_serve_config(self) -> ServeConfig:
         return ServeConfig(self.max_len, self.temperature, self.star_sampling)
@@ -177,14 +198,68 @@ class ContinuousBatchingEngine:
                 f"only attention-family models implement (got {model_cfg.family!r})"
             )
         self.scheduler = SlotScheduler(cb_cfg.num_slots)
-        self.pool = self.model.init_pool_cache(cb_cfg.num_slots, cb_cfg.max_len)
-        # donate the pool everywhere it is threaded through: the tick, the
-        # admission write, and the retirement reset all update it in place
-        # instead of copying the whole [L, S, T, H, D] pool (self.pool is
-        # rebound to the result each call, so the old buffer is never live)
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
-        self._write_slot = jax.jit(
-            self.model.write_slot, static_argnums=(2,), donate_argnums=(0,))
+        # KV layout: the config picks it, and the "paged" marker impl —
+        # via ops.use(attention="paged") or the config's own attention
+        # spec — flips the whole serve stack to the block-pool cache.
+        layout = cb_cfg.kv_layout
+        if (
+            active_overrides("attention").get("impl") == "paged"
+            or model_cfg.attention_spec.impl == "paged"
+        ):
+            layout = "paged"
+        if layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', got {layout!r}")
+        self.kv_layout = layout
+        self._cache_t = self.model.cache_len(cb_cfg.max_len)
+        # ring caches (sliding window shorter than max_len) wrap in place:
+        # their blocks are allocated once per admission, never appended
+        self._ring = (
+            model_cfg.sliding_window is not None
+            and self._cache_t <= model_cfg.sliding_window
+        )
+        if layout == "paged":
+            bs = cb_cfg.kv_block_size
+            self._slot_blocks = -(-self._cache_t // bs)  # table width W
+            usable = cb_cfg.kv_pool_blocks
+            if usable is None:
+                usable = cb_cfg.num_slots * self._slot_blocks
+            self.block_pool = BlockPool(usable + 1, bs)  # +1: scratch block 0
+            if self._ring and self._slot_blocks > self.block_pool.usable_blocks:
+                raise ValueError(
+                    f"a sliding-window ring needs {self._slot_blocks} blocks "
+                    f"per slot but the pool only has "
+                    f"{self.block_pool.usable_blocks}; raise kv_pool_blocks"
+                )
+            self.pool = self.model.init_paged_cache(
+                usable + 1, bs, cb_cfg.num_slots
+            )
+            self._tables = np.full(
+                (cb_cfg.num_slots, self._slot_blocks), SCRATCH_BLOCK, np.int32
+            )
+            self._rows = np.zeros(cb_cfg.num_slots, np.int64)  # KV rows written
+            self._decode_paged = jax.jit(
+                self.model.decode_step_paged,
+                donate_argnums=(1,),
+                static_argnames=("cache_t",),
+            )
+            self._write_slot_paged = jax.jit(
+                self.model.write_slot_paged,
+                static_argnums=(2,),
+                donate_argnums=(0,),
+            )
+            self.preemptions = 0  # OOM evictions (requeued, not dropped)
+            self.peak_used_blocks = 0
+        else:
+            self.block_pool = None
+            self.pool = self.model.init_pool_cache(cb_cfg.num_slots, cb_cfg.max_len)
+            # donate the pool everywhere it is threaded through: the tick,
+            # the admission write, and the retirement reset all update it in
+            # place instead of copying the whole [L, S, T, H, D] pool
+            # (self.pool is rebound to the result each call, so the old
+            # buffer is never live)
+            self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+            self._write_slot = jax.jit(
+                self.model.write_slot, static_argnums=(2,), donate_argnums=(0,))
         self._reset_slot = jax.jit(
             self.model.reset_slot, static_argnums=(1,), donate_argnums=(0,))
         self._serve_cfg = cb_cfg.as_serve_config()
@@ -206,18 +281,32 @@ class ContinuousBatchingEngine:
         **frontend,
     ) -> int:
         """Queue a request (never blocks); returns its uid."""
+        prefix = self._prefix_rows(frontend)
+        need = prefix + len(prompt) + max_new_tokens - 1
         if self.cfg.sliding_window is None:
             # decode writes prompt + (max_new_tokens - 1) K/V rows (the last
             # sampled token is never fed back); past capacity the per-slot
             # write would silently drop rows, so reject up front
-            prefix = self.cfg.num_patches if (
-                self.cfg.family == "vlm" and "patch_embeds" in frontend) else 0
-            need = prefix + len(prompt) + max_new_tokens - 1
             if need > self.cb.max_len:
                 raise ValueError(
                     f"request needs {need} cache rows (prompt {len(prompt)} "
                     f"+ prefix {prefix} + {max_new_tokens} new tokens) but "
                     f"the pool was built with max_len={self.cb.max_len}"
+                )
+        if self.kv_layout == "paged":
+            # a request larger than the whole pool could never be admitted,
+            # even with every other slot preempted — reject it up front
+            blocks = (
+                self._slot_blocks if self._ring
+                else self.block_pool.blocks_for_tokens(need)
+            )
+            if blocks > self.block_pool.usable_blocks:
+                raise ValueError(
+                    f"request needs {blocks} KV blocks "
+                    f"({need} rows at block_size="
+                    f"{self.block_pool.block_size}) but the pool only has "
+                    f"{self.block_pool.usable_blocks}; raise kv_pool_blocks "
+                    f"or kv_block_size, or split the request"
                 )
         uid = self.scheduler.submit(
             prompt, max_new_tokens, eos_id=eos_id, arrival_time=arrival_time
@@ -228,13 +317,22 @@ class ContinuousBatchingEngine:
 
     # -- the tick -----------------------------------------------------------
 
+    def _prefix_rows(self, frontend: Dict[str, Any]) -> int:
+        """KV rows the frontend prepends before the prompt (VLM patches).
+        Used by both the submit-time capacity check and the admission
+        block allocation — one definition so they can never diverge."""
+        if self.cfg.family == "vlm" and "patch_embeds" in frontend:
+            return self.cfg.num_patches
+        return 0
+
     def _request_key(self, req: Request, index: int) -> jax.Array:
         # Per-request stream, independent of slot placement and co-tenants.
         return jax.random.fold_in(jax.random.fold_in(self._base_key, req.uid), index)
 
     def _emit(self, slot: Slot, token: int, finished: bool) -> TokenEvent:
         req = slot.request
-        ev = TokenEvent(req.uid, token, len(slot.generated) - 1, finished)
+        index = len(req.generated_prefix) + len(slot.generated) - 1
+        ev = TokenEvent(req.uid, token, index, finished)
         if self._on_token is not None:
             self._on_token(ev)
         return ev
@@ -242,25 +340,182 @@ class ContinuousBatchingEngine:
     def _finish(self, slot: Slot) -> None:
         req = self.scheduler.retire(slot)
         self._frontend.pop(req.uid, None)
+        if self.kv_layout == "paged":
+            self.block_pool.release(req.uid)
+            self._tables[slot.index, :] = SCRATCH_BLOCK
         self.pool = self._reset_slot(self.pool, slot.index)
 
+    # -- paged-pool block management -----------------------------------------
+
+    def _preempt(self, slot: Slot) -> None:
+        """Evict ``slot``'s request (OOM policy): release its blocks back
+        to the pool and requeue it at the front of the pending queue.  Its
+        generated tokens fold into the request, so on re-admission it
+        re-prefills ``prompt + generated_prefix`` and resumes mid-stream
+        — greedy output and per-request PRNG streams are unaffected."""
+        req = self.scheduler.preempt(slot)  # keeps FIFO priority
+        # a victim bound this very tick but not yet prefilled owns no
+        # blocks yet — nothing to release
+        if req.uid in self.block_pool.owners():
+            self.block_pool.release(req.uid)
+        self._tables[slot.index, :] = SCRATCH_BLOCK
+        self.pool = self._reset_slot(self.pool, slot.index)
+        self.preemptions += 1
+
+    def _lowest_priority_victim(self, min_uid: int) -> Optional[Slot]:
+        """The active slot with the largest uid above ``min_uid`` —
+        latest-admitted work is evicted first (FIFO priority: earlier
+        requests never yield to later ones)."""
+        victims = [
+            s for s in self.scheduler.active_slots if s.request.uid > min_uid
+        ]
+        return max(victims, key=lambda s: s.request.uid) if victims else None
+
+    def _note_peak(self) -> None:
+        """Record the allocator high-water mark at allocation time, so
+        transients that release within the same tick still count."""
+        self.peak_used_blocks = max(
+            self.peak_used_blocks, self.block_pool.used_blocks
+        )
+
+    def _admit_blocks(self, slot: Slot, rows: int) -> bool:
+        """Allocate the admission block table for ``rows`` prefill rows,
+        preempting lower-priority slots on exhaustion.  Returns False (and
+        requeues the request) if the pool cannot fit it even then."""
+        req = slot.request
+        n = (
+            self._slot_blocks if self._ring
+            else self.block_pool.blocks_for_tokens(rows)
+        )
+        while not self.block_pool.can_allocate(n):
+            victim = self._lowest_priority_victim(req.uid)
+            if victim is None:
+                self.scheduler.pending.appendleft(slot.release())
+                return False
+            self._preempt(victim)
+        blocks = self.block_pool.allocate(req.uid, n)
+        self._tables[slot.index, :] = SCRATCH_BLOCK
+        self._tables[slot.index, :n] = blocks
+        self._note_peak()
+        return True
+
+    def _ensure_decode_block(self, slot: Slot) -> bool:
+        """Grow the slot's table when this tick's KV write opens a new
+        block (non-ring only; rings wrap in place).  Preempts on
+        exhaustion — possibly the slot itself when it *is* the
+        lowest-priority occupant.  Returns False if the slot was evicted."""
+        if self._ring:
+            return True
+        rows = int(self._rows[slot.index])
+        if rows % self.block_pool.block_size != 0:
+            return True  # current block still has room
+        req = slot.request
+        while not self.block_pool.can_allocate(1):
+            victim = self._lowest_priority_victim(-1)
+            if victim is None or victim is slot:
+                self._preempt(slot)
+                return False
+            self._preempt(victim)
+        blk = self.block_pool.append(req.uid)
+        self._tables[slot.index, rows // self.block_pool.block_size] = blk
+        self._note_peak()
+        return True
+
+    def kv_row_bytes(self) -> int:
+        """Bytes one KV token row costs across all layers (K + V)."""
+        pk = self.pool["layers"]["k"]
+        num_layers = pk.shape[0]
+        head_bytes = int(np.prod(pk.shape[-2:])) * pk.dtype.itemsize
+        return 2 * num_layers * head_bytes
+
+    def kv_stats(self) -> Dict[str, Any]:
+        """Live KV-memory accounting (benchmarks/serve_throughput.py).
+
+        ``kv_bytes_in_use`` is what an allocator has to *pin* right now:
+        the dense layout pins its full ``num_slots * cache_len`` buffer
+        regardless of occupancy; the paged layout pins only allocated
+        blocks."""
+        row_bytes = self.kv_row_bytes()
+        if self.kv_layout == "paged":
+            bs = self.block_pool.block_size
+            return {
+                "layout": "paged",
+                "used_blocks": self.block_pool.used_blocks,
+                "free_blocks": self.block_pool.free_blocks,
+                "total_blocks": self.block_pool.usable_blocks,
+                "kv_bytes_in_use": self.block_pool.used_blocks * bs * row_bytes,
+                "kv_bytes_capacity": (
+                    self.block_pool.usable_blocks * bs * row_bytes
+                ),
+                "peak_kv_bytes": self.peak_used_blocks * bs * row_bytes,
+                "preemptions": self.preemptions,
+                "peak_used_blocks": self.peak_used_blocks,
+            }
+        rows = self.cb.num_slots * self._cache_t
+        return {
+            "layout": "dense",
+            "kv_bytes_in_use": rows * row_bytes,
+            "kv_bytes_capacity": rows * row_bytes,
+            "peak_kv_bytes": rows * row_bytes,
+        }
+
+    # -- the tick (continued) ------------------------------------------------
+
     def step(self) -> List[TokenEvent]:
-        """One engine tick: admit + prefill new requests, then one jitted
-        decode across the pool.  Returns the tokens emitted this tick."""
+        """One engine tick: admit + prefill new requests (allocating KV
+        blocks under the paged layout, preempting on exhaustion), then one
+        jitted decode across the pool.  Returns the tokens emitted."""
         events: List[TokenEvent] = []
+        paged = self.kv_layout == "paged"
 
         # 1. admission: prefill pending requests into free slots.  Decode
         #    state of already-active slots is untouched — they proceed on
-        #    the same tick below.
+        #    the same tick below.  A preempted request re-prefills its
+        #    prompt plus everything it had generated.
         for slot in self.scheduler.admit():
+            if slot.free:
+                continue  # preempted by an earlier admission this tick
             req = slot.request
             fe = self._frontend.get(req.uid, {})
+            tokens = np.concatenate(
+                [req.prompt, np.asarray(req.generated_prefix, np.int32)]
+            ) if req.generated_prefix else req.prompt
+            rows = self._prefix_rows(fe) + len(tokens)
+            if paged:
+                if not self._admit_blocks(slot, rows):
+                    continue  # pool full even after preemption: wait in line
+                # prefill only as many rows as the table holds: the block
+                # grid, not max_len, sizes the single-request cache (rings
+                # keep the full window — they wrap in place).  This makes
+                # the jitted write_slot_paged retrace per (slot, block
+                # count) — bounded by num_slots * slot_blocks tiny scatter
+                # programs; prefill itself is eager and reshapes per
+                # prompt length on the dense path too
+                n_blocks = (
+                    self._slot_blocks if self._ring
+                    else self.block_pool.blocks_for_tokens(rows)
+                )
+                prefill_len = (
+                    self.cb.max_len if self._ring
+                    else n_blocks * self.block_pool.block_size
+                )
+            else:
+                prefill_len = self.cb.max_len
             logits, cache1 = self.model.prefill(
-                self.params, jnp.asarray(req.prompt)[None], self.cb.max_len, **fe
+                self.params, jnp.asarray(tokens)[None], prefill_len, **fe
             )
-            self.pool = self._write_slot(self.pool, cache1, slot.index)
+            if paged:
+                table = jnp.asarray(self._tables[slot.index, :n_blocks])
+                self.pool = self._write_slot_paged(
+                    self.pool, cache1, slot.index, table
+                )
+                self._rows[slot.index] = rows
+            else:
+                self.pool = self._write_slot(self.pool, cache1, slot.index)
             tok = int(sample_token(
-                logits[0, -1], self._request_key(req, 0), self.cfg, self._serve_cfg
+                logits[0, -1],
+                self._request_key(req, len(req.generated_prefix)),
+                self.cfg, self._serve_cfg,
             ))
             finished = self.scheduler.record_token(slot, tok)
             events.append(self._emit(slot, tok, finished))
@@ -268,26 +523,46 @@ class ContinuousBatchingEngine:
             if finished:
                 self._finish(slot)
 
-        # 2. one decode tick across the whole slot pool.
+        # 2. block upkeep: every active slot needs a home for this tick's
+        #    KV write; exhaustion preempts latest-admitted work first.
+        if paged:
+            for slot in sorted(
+                self.scheduler.active_slots, key=lambda s: s.request.uid
+            ):
+                if not slot.free:
+                    self._ensure_decode_block(slot)
+
+        # 3. one decode tick across the whole slot pool.
         active = self.scheduler.active_slots
         if active:
-            logits, self.pool = self._decode(
-                self.params, self.pool, jnp.asarray(self._inputs)
-            )
+            if paged:
+                logits, self.pool = self._decode_paged(
+                    self.params, self.pool, jnp.asarray(self._inputs),
+                    jnp.asarray(self._tables), cache_t=self._cache_t,
+                )
+                for slot in active:
+                    self._rows[slot.index] += 1
+            else:
+                logits, self.pool = self._decode(
+                    self.params, self.pool, jnp.asarray(self._inputs)
+                )
             last = logits[:, -1]  # [S, V]
             # one batched sampling program + one host sync for all slots
             if self._serve_cfg.temperature <= 0.0:
                 sampled = np.asarray(jnp.argmax(last, axis=-1))
                 toks = {s.index: int(sampled[s.index]) for s in active}
             else:
-                rows = jnp.asarray([s.index for s in active])
+                rows_ix = jnp.asarray([s.index for s in active])
                 uids = jnp.asarray([s.request.uid for s in active])
-                steps = jnp.asarray([len(s.generated) for s in active])
+                steps = jnp.asarray([
+                    len(s.request.generated_prefix) + len(s.generated)
+                    for s in active
+                ])
                 keys = jax.vmap(lambda u, i: jax.random.fold_in(
                     jax.random.fold_in(self._base_key, u), i))(uids, steps)
                 sampled = np.asarray(jax.vmap(
                     lambda lg, k: sample_token(lg, k, self.cfg, self._serve_cfg)
-                )(last[rows], keys))
+                )(last[rows_ix], keys))
                 toks = {s.index: int(t) for s, t in zip(active, sampled)}
             for slot in active:
                 tok = toks[slot.index]

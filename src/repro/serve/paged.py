@@ -1,0 +1,182 @@
+"""Paged KV-cache block pool: fixed-size token blocks + per-request tables.
+
+The dense slot pool (PR 1) allocates ``num_slots * max_len`` KV rows up
+front, so memory scales with worst-case capacity regardless of occupancy.
+This module is the host-side half of the paged replacement (DESIGN.md §8):
+the device cache becomes a flat pool of ``num_blocks`` blocks of
+``block_size`` token rows each, and every request owns a *block table* — an
+ordered list of block ids whose concatenation is that request's logical KV
+buffer.  Decode cost and memory then scale with **live tokens**, not with
+``num_slots * max_len`` — the STAR argument (attention state tiled into
+crossbar-sized blocks instead of monolithic buffers) applied to serving.
+
+Layout invariant: logical token row ``i`` of a request lives at row
+``i % block_size`` of ``table[i // block_size]``.  Gathering a table and
+concatenating its blocks therefore reproduces the dense per-slot cache row
+bit-for-bit (up to masked garbage past the valid length), which is what
+makes paged greedy decode token-identical to the dense path.
+
+* **Block 0 is reserved** as the *scratch* block: free slots and unused
+  table entries point at it, so the jitted decode step can scatter-write
+  unconditionally — garbage lands in scratch and is never gathered as
+  valid rows.  ``num_blocks`` therefore buys ``num_blocks - 1`` usable
+  blocks.
+* **Free list** — allocate/append pop from it, release pushes back.
+  Exhaustion raises :class:`PoolExhausted`; the engine's policy on that
+  signal (preempt the lowest-priority slot and requeue it) lives in
+  ``serve/engine.py``, not here.
+* **Copy-on-fork** — ``fork`` shares the parent's blocks with a child
+  table under refcounting (beam / parallel-sampling decode shares the
+  whole prompt prefix for free).  A write to a *shared* block must first
+  privatize it: ``ensure_writable`` returns the ``(src, dst)`` block copy
+  the device cache has to perform.  Only the last block is ever written
+  in append-only decode, so one copy per fork divergence suffices.
+
+Pure host-side bookkeeping (no jax imports) — same layering as
+:class:`~repro.serve.scheduler.SlotScheduler`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+SCRATCH_BLOCK = 0  # reserved id: free-slot / padding writes land here
+
+
+class PoolExhausted(RuntimeError):
+    """The free list cannot satisfy an allocation.
+
+    Carries enough context for an actionable message; the engine catches
+    this to drive preemption rather than surfacing it to callers.
+    """
+
+
+class BlockPool:
+    """Fixed-size block allocator with per-request tables and refcounts."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (block 0 is the reserved scratch "
+                f"block), got {num_blocks}"
+            )
+        if block_size <= 0:
+            raise ValueError(f"block_size must be positive, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list: hot blocks are reused first (better locality and
+        # the stale-reuse tests exercise the hardest path constantly)
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._refcount: Dict[int, int] = {}
+        self._tables: Dict[int, List[int]] = {}
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def usable_blocks(self) -> int:
+        """Blocks a single request could ever own (scratch excluded)."""
+        return self.num_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Distinct allocated blocks (shared blocks counted once)."""
+        return self.usable_blocks - len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` rows."""
+        return -(-tokens // self.block_size)
+
+    # -- tables --------------------------------------------------------------
+
+    def table(self, uid: int) -> List[int]:
+        """The request's block table (a copy: callers cannot corrupt it)."""
+        return list(self._tables[uid])
+
+    def owners(self) -> List[int]:
+        return sorted(self._tables)
+
+    def allocate(self, uid: int, n: int) -> List[int]:
+        """Create a table of ``n`` fresh blocks for ``uid``."""
+        if uid in self._tables:
+            raise ValueError(f"uid {uid} already owns a block table")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"request {uid} needs {n} blocks but only "
+                f"{len(self._free)} of {self.usable_blocks} are free"
+            )
+        blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._refcount[b] = 1
+        self._tables[uid] = blocks
+        return list(blocks)
+
+    def append(self, uid: int) -> int:
+        """Grow ``uid``'s table by one fresh block; returns its id."""
+        if uid not in self._tables:
+            raise ValueError(f"uid {uid} owns no block table")
+        if not self._free:
+            raise PoolExhausted(
+                f"request {uid} needs one more block but the pool is "
+                f"exhausted ({self.usable_blocks} blocks, all in use)"
+            )
+        b = self._free.pop()
+        self._refcount[b] = 1
+        self._tables[uid].append(b)
+        return b
+
+    def release(self, uid: int) -> List[int]:
+        """Drop ``uid``'s table; blocks return to the free list when their
+        refcount hits zero (forked children keep shared blocks alive)."""
+        blocks = self._tables.pop(uid)
+        freed = []
+        for b in blocks:
+            self._refcount[b] -= 1
+            if self._refcount[b] == 0:
+                del self._refcount[b]
+                self._free.append(b)
+                freed.append(b)
+        return freed
+
+    # -- copy-on-fork ---------------------------------------------------------
+
+    def fork(self, parent_uid: int, child_uid: int) -> List[int]:
+        """Share the parent's blocks with ``child_uid`` (refcount++)."""
+        if child_uid in self._tables:
+            raise ValueError(f"uid {child_uid} already owns a block table")
+        blocks = self._tables[parent_uid]
+        for b in blocks:
+            self._refcount[b] += 1
+        self._tables[child_uid] = list(blocks)
+        return list(blocks)
+
+    def ensure_writable(self, uid: int) -> Optional[Tuple[int, int]]:
+        """Privatize the request's *last* block before an append-only write.
+
+        Returns ``(src, dst)`` when the block was shared — the caller must
+        copy the device rows ``src -> dst`` before writing — or ``None``
+        when the block was already exclusive.
+        """
+        table = self._tables[uid]
+        last = table[-1]
+        if self._refcount[last] == 1:
+            return None
+        if not self._free:
+            raise PoolExhausted(
+                f"request {uid} needs a private copy of shared block {last} "
+                f"but the pool is exhausted"
+            )
+        dst = self._free.pop()
+        self._refcount[last] -= 1
+        self._refcount[dst] = 1
+        table[-1] = dst
+        return last, dst
+
+    def refcount(self, block: int) -> int:
+        return self._refcount.get(block, 0)

@@ -23,6 +23,11 @@ walks a three-state lifecycle:
   the slot immediately; the engine zeroes the slot's length counter so the
   stale KV rows are masked out (they are overwritten wholesale by the next
   admission).
+* **Preemption** (`preempt`): the paged-KV engine may evict an unfinished
+  request when the block pool runs dry.  The request keeps everything it
+  generated (``Request.generated_prefix``) and returns to the *front* of
+  the pending queue, so FIFO priority is preserved and the eventual output
+  is identical to an uncontended run.
 
 The scheduler is pure host-side bookkeeping — it never touches jax arrays —
 so it is trivially reusable by any engine that exposes "prefill into row i"
@@ -53,6 +58,11 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_time: float = 0.0
+    # Tokens generated before a preemption (paged KV pools): a preempted
+    # request re-prefills ``prompt + generated_prefix`` on re-admission and
+    # resumes mid-stream — budget, PRNG indices, and the finished output
+    # all count these tokens, so preemption is invisible to the caller.
+    generated_prefix: List[int] = dataclasses.field(default_factory=list)
 
     def __post_init__(self) -> None:
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -137,18 +147,34 @@ class SlotScheduler:
 
     def record_token(self, slot: Slot, token: int) -> bool:
         """Append a sampled token to the slot; returns True if the request
-        just finished (budget exhausted or EOS sampled)."""
+        just finished (budget exhausted or EOS sampled).  Tokens produced
+        before a preemption (``generated_prefix``) count against the
+        budget."""
         req = slot.request
         assert req is not None
         slot.generated.append(int(token))
         if req.eos_id is not None and int(token) == req.eos_id:
             return True
-        return len(slot.generated) >= req.max_new_tokens
+        return len(req.generated_prefix) + len(slot.generated) >= req.max_new_tokens
 
     def retire(self, slot: Slot) -> Request:
         """Finish the slot's request and free the slot for immediate reuse."""
-        self.finished[slot.request.uid] = list(slot.generated)
+        req = slot.request
+        self.finished[req.uid] = list(req.generated_prefix) + list(slot.generated)
         return slot.release()
+
+    def preempt(self, slot: Slot) -> Request:
+        """Evict an unfinished request: fold its generated tokens into the
+        request's ``generated_prefix`` and requeue it at the *front* of the
+        pending queue (it keeps its FIFO priority).  The engine owns the
+        policy of *which* slot to preempt (paged pool exhaustion) and must
+        release the slot's KV resources itself."""
+        req = slot.request
+        assert req is not None
+        req.generated_prefix = list(req.generated_prefix) + list(slot.generated)
+        slot.release()
+        self.pending.appendleft(req)
+        return req
 
     # -- introspection ------------------------------------------------------
 

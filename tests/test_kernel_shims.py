@@ -1,0 +1,96 @@
+"""kernels/*/ops.py deprecation shims: warn exactly once per process and
+dispatch to the same result as the registry path they wrap."""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as kernels
+from repro import ops
+
+RNG = np.random.default_rng(5)
+
+
+@pytest.fixture
+def fresh_warnings(monkeypatch):
+    """Reset the once-per-process guard: earlier tests (the kernel suites
+    call the shims heavily) may already have burned the single warning."""
+    monkeypatch.setattr(kernels, "_SHIM_WARNED", set())
+
+
+def test_star_softmax_shim_warns_once_and_matches(fresh_warnings):
+    from repro.kernels.star_softmax.ops import star_softmax_op
+
+    x = jnp.asarray(RNG.normal(size=(4, 64)) * 3, jnp.float32)
+    with pytest.warns(DeprecationWarning, match="star_softmax_op is deprecated"):
+        out = star_softmax_op(x)
+    want = ops.softmax(x, ops.SoftmaxSpec(impl="pallas", kind="star"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    # second call: silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        star_softmax_op(x)
+
+
+def test_flash_star_shim_warns_once_and_matches(fresh_warnings):
+    from repro.kernels.flash_star.ops import flash_star_op
+
+    q = jnp.asarray(RNG.normal(size=(1, 8, 2, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 8, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 8, 2, 16)), jnp.float32)
+    with pytest.warns(DeprecationWarning, match="flash_star_op is deprecated"):
+        out = flash_star_op(q, k, v, causal=True, block_q=8, block_k=8)
+    want = ops.attention(
+        q, k, v, ops.AttentionSpec(impl="pallas", causal=True, block_q=8, block_k=8)
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        flash_star_op(q, k, v, causal=True, block_q=8, block_k=8)
+
+
+def test_crossbar_shim_warns_once_and_matches(fresh_warnings):
+    from repro.kernels.crossbar_matmul.ops import crossbar_matmul_op
+
+    x = jnp.asarray(RNG.normal(size=(8, 32)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 16)) * 0.1, jnp.float32)
+    with pytest.warns(DeprecationWarning, match="crossbar_matmul_op is deprecated"):
+        out = crossbar_matmul_op(x, w)
+    want = ops.matmul(x, w, ops.MatmulSpec(impl="hwmodel"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        crossbar_matmul_op(x, w)
+
+
+def test_ssd_scan_shim_warns_once_and_matches(fresh_warnings):
+    from repro.kernels.ssd_scan.ops import ssd_scan_op
+
+    xdt = jnp.asarray(RNG.normal(size=(1, 32, 2, 8)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(RNG.normal(size=(1, 32, 2)) * 0.1, jnp.float32))
+    bm = jnp.asarray(RNG.normal(size=(1, 32, 8)) * 0.3, jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(1, 32, 8)) * 0.3, jnp.float32)
+    with pytest.warns(DeprecationWarning, match="ssd_scan_op is deprecated"):
+        y, h = ssd_scan_op(xdt, a, bm, cm, chunk=16)
+    y2, h2 = ops.ssd_scan(xdt, a, bm, cm, ops.ScanSpec(impl="pallas", chunk=16))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(h2))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ssd_scan_op(xdt, a, bm, cm, chunk=16)
+
+
+def test_each_shim_warns_independently(fresh_warnings):
+    """The once-guard is per shim, not global: using one shim must not
+    swallow another's warning."""
+    from repro.kernels.crossbar_matmul.ops import crossbar_matmul_op
+    from repro.kernels.star_softmax.ops import star_softmax_op
+
+    x = jnp.asarray(RNG.normal(size=(2, 32)), jnp.float32)
+    with pytest.warns(DeprecationWarning, match="star_softmax_op"):
+        star_softmax_op(x)
+    w = jnp.asarray(RNG.normal(size=(32, 8)) * 0.1, jnp.float32)
+    with pytest.warns(DeprecationWarning, match="crossbar_matmul_op"):
+        crossbar_matmul_op(x, w)

@@ -292,3 +292,116 @@ def test_moe_router_exact_falls_back_from_star_only_impl():
     x = jnp.asarray(RNG.normal(size=(2, 8, cfg.d_model)), jnp.float32)
     out = moe(params, x, cfg)
     assert out.shape == x.shape and bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# paged attention (block-pool KV decode — DESIGN.md §8)
+
+PAGED_IMPLS = [b.impl for b in ops.backends("paged_attention")]
+
+
+def _paged_operands(s=3, w=3, bs=4, hq=4, hkv=2, d=16):
+    n = s * w + 1  # block 0 reserved as scratch
+    q = jnp.asarray(RNG.normal(size=(s, 1, hq, d)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(n, bs, hkv, d)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(n, bs, hkv, d)), jnp.float32)
+    tables = jnp.asarray(
+        [[i * w + j + 1 for j in range(w)] for i in range(s)], jnp.int32
+    )
+    kvl = jnp.asarray([6, 11, 2], jnp.int32)
+    return q, kp, vp, tables, kvl
+
+
+def test_paged_attention_registered_backends():
+    assert {"reference", "xla", "pallas"} <= set(PAGED_IMPLS)
+    assert ops.get("attention", "paged") is not None  # the layout marker
+
+
+@pytest.mark.parametrize("impl", PAGED_IMPLS)
+def test_paged_attention_backend_parity(impl):
+    q, kp, vp, tables, kvl = _paged_operands()
+    spec = ops.PagedAttentionSpec(impl=impl, block_size=4)
+    ref = ops.paged_attention(
+        q, kp, vp, tables, spec, kv_valid_len=kvl, kv_len=10, impl="reference"
+    )
+    out = ops.paged_attention(q, kp, vp, tables, spec, kv_valid_len=kvl, kv_len=10)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-6)
+
+
+@pytest.mark.parametrize("impl", PAGED_IMPLS)
+def test_paged_attention_matches_dense_gather(impl):
+    """Gathering a block table reproduces the dense cache: the paged op
+    must agree with dense attention over the manually flattened blocks."""
+    q, kp, vp, tables, kvl = _paged_operands()
+    s, w = tables.shape
+    bs = kp.shape[1]
+    flat = np.asarray(tables).reshape(-1)
+    kd = jnp.asarray(np.asarray(kp)[flat].reshape(s, w * bs, *kp.shape[2:])[:, :10])
+    vd = jnp.asarray(np.asarray(vp)[flat].reshape(s, w * bs, *vp.shape[2:])[:, :10])
+    dense = ops.attention(
+        q,
+        kd,
+        vd,
+        ops.AttentionSpec(impl="reference", causal=False),
+        kv_valid_len=kvl,
+    )
+    out = ops.paged_attention(
+        q,
+        kp,
+        vp,
+        tables,
+        ops.PagedAttentionSpec(impl=impl, block_size=4),
+        kv_valid_len=kvl,
+        kv_len=10,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), atol=3e-6)
+
+
+def test_paged_attention_use_override():
+    q, kp, vp, tables, kvl = _paged_operands()
+    ref = ops.paged_attention(
+        q, kp, vp, tables, kv_valid_len=kvl, kv_len=10, impl="reference"
+    )
+    with ops.use(paged_attention="reference"):
+        out = ops.paged_attention(
+            q,
+            kp,
+            vp,
+            tables,
+            ops.PagedAttentionSpec(impl="xla"),
+            kv_valid_len=kvl,
+            kv_len=10,
+        )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_attention_pallas_capability():
+    q, kp, vp, tables, kvl = _paged_operands()
+    spec = ops.PagedAttentionSpec(
+        impl="pallas", softmax=ops.SoftmaxSpec(kind="star_ste")
+    )
+    with pytest.raises(ops.CapabilityError, match="pallas"):
+        ops.paged_attention(q, kp, vp, tables, spec, kv_valid_len=kvl)
+
+
+def test_paged_spec_validation_and_json():
+    import json
+
+    with pytest.raises(ValueError, match="block_size"):
+        ops.PagedAttentionSpec(block_size=0)
+    spec = ops.validate(ops.PagedAttentionSpec(impl="pallas"))
+    assert spec.interpret in (True, False)
+    blob = json.dumps(ops.spec_json(spec))
+    assert json.loads(blob)["op"] == "paged_attention"
+
+
+def test_config_derives_paged_spec():
+    cfg = get_smoke_config("granite_8b")
+    spec = cfg.paged_attention_spec
+    assert spec.impl == "xla"
+    assert spec.softmax == cfg.softmax_spec
+    # the "paged" marker impl maps to xla math for the inner op
+    paged_cfg = dataclasses.replace(cfg, attn_impl="paged")
+    assert paged_cfg.attention_spec.impl == "paged"
+    assert paged_cfg.paged_attention_spec.impl == "xla"
+    ops.validate(paged_cfg.attention_spec)  # the marker impl is registered

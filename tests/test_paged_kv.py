@@ -1,0 +1,334 @@
+"""Paged KV-cache subsystem: block-pool allocator, engine parity with the
+dense slot pool, preemption policy, and block reuse.
+
+The core claim (DESIGN.md §8): greedy decode through the paged pool is
+token-identical to the dense per-slot path — block tables change *where*
+KV rows live, never *what* attention computes — while memory tracks live
+tokens instead of ``num_slots * max_len``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ops
+from repro.configs import get_smoke_config
+from repro.models.param import materialize
+from repro.models.registry import build_model
+from repro.serve.engine import (
+    ContinuousBatchingEngine,
+    ContinuousConfig,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.serve.paged import SCRATCH_BLOCK, BlockPool, PoolExhausted
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+MAX_LEN = 40
+
+
+# ---------------------------------------------------------------------------
+# BlockPool (host allocator)
+
+
+def test_pool_validation_and_capacity():
+    with pytest.raises(ValueError):
+        BlockPool(1, 4)  # needs scratch + at least one usable block
+    with pytest.raises(ValueError):
+        BlockPool(8, 0)
+    pool = BlockPool(9, 4)
+    assert pool.usable_blocks == 8 and pool.free_blocks == 8
+    assert pool.blocks_for_tokens(1) == 1
+    assert pool.blocks_for_tokens(4) == 1
+    assert pool.blocks_for_tokens(5) == 2
+
+
+def test_pool_allocate_append_release_roundtrip():
+    pool = BlockPool(5, 4)  # 4 usable
+    t0 = pool.allocate(0, 2)
+    assert len(t0) == 2 and SCRATCH_BLOCK not in t0
+    assert pool.used_blocks == 2
+    b = pool.append(0)
+    assert pool.table(0) == t0 + [b]
+    t1 = pool.allocate(1, 1)
+    assert set(t1).isdisjoint(pool.table(0))
+    with pytest.raises(PoolExhausted):
+        pool.allocate(2, 1)  # 4 of 4 in use
+    freed = pool.release(0)
+    assert sorted(freed) == sorted(t0 + [b])
+    assert pool.free_blocks == 3
+    # released blocks are reusable immediately
+    assert len(pool.allocate(2, 3)) == 3
+
+
+def test_pool_exhaustion_message_is_actionable():
+    pool = BlockPool(3, 4)
+    pool.allocate(0, 2)
+    with pytest.raises(PoolExhausted, match="needs 1 blocks|exhausted"):
+        pool.allocate(1, 1)
+    with pytest.raises(PoolExhausted, match="exhausted"):
+        pool.append(0)
+
+
+def test_pool_copy_on_fork_refcounts():
+    pool = BlockPool(8, 4)
+    parent = pool.allocate(0, 3)
+    child = pool.fork(0, 1)
+    assert child == parent
+    assert pool.used_blocks == 3  # shared blocks counted once
+    assert pool.refcount(parent[-1]) == 2
+    # a write to the shared last block must privatize it first
+    cow = pool.ensure_writable(1)
+    assert cow is not None
+    src, dst = cow
+    assert src == parent[-1] and dst not in parent
+    assert pool.table(1)[-1] == dst and pool.table(0)[-1] == src
+    assert pool.refcount(src) == 1 and pool.refcount(dst) == 1
+    # exclusive table: no copy needed
+    assert pool.ensure_writable(0) is None
+    # releasing the parent keeps the shared prefix alive for the child
+    freed = pool.release(0)
+    assert freed == [src]  # prefix blocks still referenced by the child
+    assert pool.used_blocks == 3  # 2 shared prefix + child's private last
+    assert sorted(pool.release(1)) == sorted(parent[:-1] + [dst])
+    assert pool.free_blocks == 7
+
+
+# ---------------------------------------------------------------------------
+# engine parity vs the dense slot pool
+
+
+def _model_params(arch="granite_8b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    return cfg, materialize(model.param_specs(), KEY)
+
+
+def _expected(cfg, params, prompts, gens, frontends=None):
+    ref = ServeEngine(cfg, params, ServeConfig(max_len=MAX_LEN, temperature=0.0))
+    fes = frontends or [{} for _ in prompts]
+    return [
+        np.asarray(ref.generate(
+            jnp.asarray(p)[None], g,
+            **{k: jnp.asarray(v) for k, v in fe.items()})[0])[0].tolist()
+        for p, g, fe in zip(prompts, gens, fes)
+    ]
+
+
+@pytest.mark.parametrize("arch,lens", [
+    ("granite_8b", (5, 11, 8, 3)),           # dense append path
+    ("granite_moe_1b_a400m", (5, 11, 8, 3)),  # MoE router in the loop
+    ("mixtral_8x22b", (20, 11, 18, 3)),       # window=16 ring: prompts wrap
+])
+def test_paged_greedy_parity(arch, lens):
+    cfg, params = _model_params(arch)
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    gens = [4, 2, 5, 3]
+    expected = _expected(cfg, params, prompts, gens)
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4))
+    uids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    done = eng.run()
+    assert [done[u] for u in uids] == expected
+
+
+def test_paged_vlm_mrope_parity():
+    cfg, params = _model_params("qwen2_vl_7b")
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 9)]
+    pe = [RNG.standard_normal((1, cfg.num_patches, cfg.frontend_dim))
+          .astype(np.float32) for _ in prompts]
+    gens = [3, 2]
+    expected = _expected(cfg, params, prompts, gens,
+                         [{"patch_embeds": e} for e in pe])
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4))
+    uids = [eng.submit(p, g, patch_embeds=e)
+            for p, g, e in zip(prompts, gens, pe)]
+    done = eng.run()
+    assert [done[u] for u in uids] == expected
+
+
+def test_ops_use_paged_flips_engine_layout():
+    """ops.use(attention="paged") alone must flip the serve stack."""
+    cfg, params = _model_params()
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 8)]
+    expected = _expected(cfg, params, prompts, [3, 2])
+    with ops.use(attention="paged"):
+        eng = ContinuousBatchingEngine(
+            cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN))
+        assert eng.kv_layout == "paged"
+        uids = [eng.submit(p, g) for p, g in zip(prompts, [3, 2])]
+        done = eng.run()
+    assert [done[u] for u in uids] == expected
+
+
+def test_paged_memory_tracks_live_tokens():
+    """Peak paged KV bytes stay strictly below the dense pool's buffer."""
+    cfg, params = _model_params()
+    prompts = [RNG.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4))
+    for p in prompts:
+        eng.submit(p, 3)
+    eng.run()
+    st = eng.kv_stats()
+    assert st["used_blocks"] == 0  # everything released on retire
+    assert 0 < st["peak_kv_bytes"] < st["kv_bytes_capacity"]
+    # dense equivalent capacity = num_slots * cache_len rows (kv_row_bytes
+    # already counts both K and V)
+    dense_bytes = eng.cb.num_slots * eng._cache_t * eng.kv_row_bytes()
+    assert st["peak_kv_bytes"] < dense_bytes
+
+
+# ---------------------------------------------------------------------------
+# scheduler / allocator edge cases (ISSUE satellites)
+
+
+def test_request_longer_than_pool_rejected_actionably():
+    cfg, params = _model_params()
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=1, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4,
+                         kv_pool_blocks=3))
+    with pytest.raises(ValueError, match="KV blocks.*kv_pool_blocks"):
+        eng.submit(RNG.integers(0, cfg.vocab_size, (10,)), 8)
+    # a fitting request still admits
+    uid = eng.submit(RNG.integers(0, cfg.vocab_size, (6,)), 3)
+    assert len(eng.run()[uid]) == 3
+
+
+def test_pool_exhaustion_preempts_lowest_priority_first():
+    """When the pool runs dry, the latest-admitted (highest-uid) active
+    request is evicted and requeued — earlier requests never yield to
+    later ones — and every preempted request still completes with output
+    identical to an uncontended run."""
+    cfg, params = _model_params()
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (7, 9, 5)]
+    gens = [8, 7, 6]
+    expected = _expected(cfg, params, prompts, gens)
+
+    # pool of 6 usable blocks at block 4: three slots cannot co-reside at
+    # full depth, so decode-time appends must preempt
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=3, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4,
+                         kv_pool_blocks=6))
+    preempted = []
+    orig = eng._preempt
+
+    def spy(slot):
+        preempted.append(slot.request.uid)
+        orig(slot)
+
+    eng._preempt = spy
+    uids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    done = eng.run()
+    assert [done[u] for u in uids] == expected
+    assert eng.preemptions > 0
+    assert all(u in uids for u in preempted)
+    # FIFO priority: the oldest request (uid 0) is never evicted while
+    # younger co-tenants hold blocks — victims come from the back of the
+    # line
+    assert uids[0] not in preempted
+
+
+def test_preemption_victim_ordering_is_latest_first():
+    cfg, params = _model_params()
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=3, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4,
+                         kv_pool_blocks=6))
+    victims = []
+    orig = eng._preempt
+    eng._preempt = lambda s: (victims.append(s.request.uid), orig(s))[1]
+    for n, g in zip((7, 9, 5), (8, 7, 6)):
+        eng.submit(RNG.integers(0, cfg.vocab_size, (n,)), g)
+    eng.run()
+    assert victims, "expected pool pressure to force at least one preemption"
+    # whenever a victim is chosen, it is never uid 0 (the oldest request
+    # keeps its blocks to completion under FIFO priority)
+    assert 0 not in victims
+
+
+def test_block_table_reuse_after_retire_no_stale_reads():
+    """A slot's blocks return to the pool on retire; the next request
+    recycles them.  Its output must match an uncontended run — i.e. no
+    stale KV rows from the previous owner leak through the gather."""
+    cfg, params = _model_params()
+    prompts = [RNG.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (11, 4, 9, 6, 13)]
+    gens = [3, 5, 2, 4, 3]
+    expected = _expected(cfg, params, prompts, gens)
+    # one slot: every request reuses the same recycled blocks back to back
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=1, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4,
+                         kv_pool_blocks=5))
+    uids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    done = eng.run()
+    assert [done[u] for u in uids] == expected
+    assert eng.block_pool.used_blocks == 0
+
+
+def test_paged_sampling_streams_survive_preemption():
+    """Per-request PRNG streams are indexed by absolute generation index,
+    so a preempted+resumed sampled request draws the same tokens as an
+    uncontended run."""
+    cfg, params = _model_params()
+    prompt = RNG.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+
+    solo = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN, temperature=1.0,
+                         kv_layout="paged", kv_block_size=4))
+    u = solo.submit(prompt, 6)
+    toks_solo = solo.run()[u]
+
+    packed = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN, temperature=1.0,
+                         kv_layout="paged", kv_block_size=4,
+                         kv_pool_blocks=5))
+    u_same = packed.submit(prompt, 6)  # same uid 0 -> same request stream
+    packed.submit(RNG.integers(0, cfg.vocab_size, (9,)), 5)
+    assert packed.run()[u_same] == toks_solo
+
+
+def test_scheduler_preempt_requeues_at_front():
+    from repro.serve.scheduler import SlotScheduler
+
+    sched = SlotScheduler(1)
+    u0 = sched.submit(np.arange(3), 5)
+    u1 = sched.submit(np.arange(4), 5)
+    (slot,) = sched.admit()
+    sched.record_token(slot, 7)
+    sched.record_token(slot, 8)
+    req = sched.preempt(slot)
+    assert req.uid == u0 and req.generated_prefix == [7, 8]
+    # the preempted request is first in line again, ahead of u1
+    assert [r.uid for r in sched.pending] == [u0, u1]
+    (slot,) = sched.admit()
+    assert slot.request.uid == u0
+    # budget counts the prefix: 3 more tokens finish the request
+    assert sched.record_token(slot, 9) is False
+    assert sched.record_token(slot, 10) is False
+    assert sched.record_token(slot, 11) is True
+    sched.retire(slot)
+    assert sched.finished[u0] == [7, 8, 9, 10, 11]

@@ -146,11 +146,16 @@ def test_logical_rules_divisibility_and_single_use():
     from jax.sharding import Mesh
     from repro.distributed.sharding import DEFAULT_RULES, logical_to_pspec
 
-    devs = np.asarray(jax.devices()[:1] * 16).reshape(4, 4) if len(jax.devices()) < 16 else None
-    # Mesh with repeated device objects is invalid; build an abstract mesh
+    del Mesh, np  # Mesh with repeated device objects is invalid; build an
+    # abstract mesh instead.  The AbstractMesh constructor changed across
+    # jax versions: <= 0.4.x takes one (name, size) pair tuple, newer
+    # takes (shape, axis_names).
     from jax.sharding import AbstractMesh
 
-    mesh = AbstractMesh((4, 4), ("data", "model"))
+    try:
+        mesh = AbstractMesh((4, 4), ("data", "model"))
+    except TypeError:  # jax <= 0.4.x signature
+        mesh = AbstractMesh((("data", 4), ("model", 4)))
     # divisible: shard
     assert logical_to_pspec(("vocab",), (512,), DEFAULT_RULES, mesh) == P("model")
     # not divisible: auto-drop
