@@ -7,11 +7,22 @@ task (induction: find the repeat of the cue token, report its successor),
 then swap the attention softmax for the STAR engine at decreasing bitwidths.
 The claim reproduces as: accuracy(calibrated 7-9 bit) ~ accuracy(exact),
 collapsing at very low bitwidths where attention can no longer stay sharp.
+
+The fault sweep (DESIGN.md §9) extends the same protocol past quantization:
+for each calibrated format it scans stuck-cell rate x conductance sigma
+(seeded :class:`~repro.ops.FaultModel` realizations on the same trained
+model) and emits accuracy-vs-fault curves — ``--json`` writes them next to
+the bitwidth results::
+
+    python benchmarks/accuracy_bitwidth.py --json out.json \
+        --fault-sigma 0,0.1,0.3 --fault-stuck-rate 0,0.02,0.1
 """
 
 from __future__ import annotations
 
-from typing import Dict
+import argparse
+import json
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,35 +124,110 @@ def evaluate(p, softmax: ops.SoftmaxSpec, seed=9) -> float:
     return float(jnp.mean(pred == cls))
 
 
-def run() -> Dict[str, float]:
-    p = train()
+SWEEPS = [
+    ("mrpc_9b", FixedPointFormat(6, 3)),
+    ("cnews_8b", FixedPointFormat(6, 2)),
+    ("cola_7b", FixedPointFormat(5, 2)),
+    ("6b", FixedPointFormat(5, 1)),
+    ("5b", FixedPointFormat(4, 1)),
+    ("4b", FixedPointFormat(3, 1)),
+    ("3b", FixedPointFormat(2, 1)),
+    ("2b", FixedPointFormat(1, 1)),
+]
+
+# calibrated formats the fault sweep stresses (>= 2, per the paper's own
+# per-dataset calibration points)
+FAULT_FORMATS = [
+    ("cnews_8b", FixedPointFormat(6, 2)),
+    ("cola_7b", FixedPointFormat(5, 2)),
+]
+
+
+def run(steps: int = 400) -> Tuple[Dict[str, float], dict]:
+    p = train(steps=steps)
     results = {"exact": evaluate(p, ops.SoftmaxSpec(kind="exact"))}
-    sweeps = [
-        ("mrpc_9b", FixedPointFormat(6, 3)),
-        ("cnews_8b", FixedPointFormat(6, 2)),
-        ("cola_7b", FixedPointFormat(5, 2)),
-        ("6b", FixedPointFormat(5, 1)),
-        ("5b", FixedPointFormat(4, 1)),
-        ("4b", FixedPointFormat(3, 1)),
-        ("3b", FixedPointFormat(2, 1)),
-        ("2b", FixedPointFormat(1, 1)),
-    ]
-    for name, fmt in sweeps:
+    for name, fmt in SWEEPS:
         results[name] = evaluate(p, ops.SoftmaxSpec(kind="star", precision=fmt))
-    return results
+    return results, p
 
 
-def main():
-    r = run()
+def fault_sweep(
+    p,
+    sigmas: Sequence[float],
+    stuck_rates: Sequence[float],
+    seed: int = 0,
+) -> List[dict]:
+    """Accuracy over the fault grid (stuck rate x sigma) per format.
+
+    Stuck cells split evenly between G_on and G_off; each grid point is one
+    seeded realization, so re-runs reproduce the same curve exactly.
+    """
+    curves: List[dict] = []
+    for name, fmt in FAULT_FORMATS:
+        for sigma in sigmas:
+            for rate in stuck_rates:
+                fault = ops.FaultModel(
+                    g_sigma=sigma,
+                    stuck_on_rate=rate / 2,
+                    stuck_off_rate=rate / 2,
+                    seed=seed,
+                )
+                spec = ops.SoftmaxSpec(kind="star", precision=fmt, fault=fault)
+                curves.append({
+                    "format": name,
+                    "g_sigma": sigma,
+                    "stuck_rate": rate,
+                    "accuracy": evaluate(p, spec),
+                    "spec": ops.spec_json(spec),
+                })
+    return curves
+
+
+def _float_list(text: str) -> List[float]:
+    return [float(v) for v in text.split(",") if v.strip()]
+
+
+def main(argv: Sequence[str] | None = None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write bitwidth results + fault curves as JSON")
+    ap.add_argument("--fault-sigma", type=_float_list, default=[0.0, 0.1, 0.3],
+                    metavar="S0,S1,...",
+                    help="lognormal conductance sigmas for the fault sweep")
+    ap.add_argument("--fault-stuck-rate", type=_float_list,
+                    default=[0.0, 0.02, 0.1], metavar="R0,R1,...",
+                    help="total stuck-cell rates (split evenly on/off)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultModel realization seed")
+    ap.add_argument("--steps", type=int, default=400,
+                    help="training steps before the sweeps")
+    args = ap.parse_args(argv)
+
+    r, p = run(steps=args.steps)
     for k, v in r.items():
         print(f"accuracy_bitwidth_{k},{v*100:.1f},acc_pct")
+
+    curves = None
+    if args.json:
+        curves = fault_sweep(
+            p, args.fault_sigma, args.fault_stuck_rate, seed=args.fault_seed
+        )
+        for c in curves:
+            print(
+                f"accuracy_fault_{c['format']}_s{c['g_sigma']}_r"
+                f"{c['stuck_rate']},{c['accuracy']*100:.1f},acc_pct"
+            )
+        with open(args.json, "w") as f:
+            json.dump({"bitwidth": r, "fault_curves": curves}, f, indent=2)
+        print(f"wrote {args.json}")
+
     assert r["exact"] > 0.9, f"training failed to learn the task: {r['exact']}"
     # the paper's claim: calibrated 7-9 bit formats preserve accuracy
     for k in ("cola_7b", "cnews_8b", "mrpc_9b"):
         assert r[k] >= r["exact"] - 0.02, (k, r[k], r["exact"])
     # and extreme truncation eventually hurts
     assert r["2b"] < r["exact"] - 0.02, ("2-bit should degrade", r["2b"])
-    return r
+    return r if curves is None else (r, curves)
 
 
 if __name__ == "__main__":

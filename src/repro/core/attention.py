@@ -36,6 +36,7 @@ from repro.core.fixedpoint import (
     quantize_logits,
 )
 from repro.core.star_softmax import exact_softmax, star_softmax, star_softmax_ste
+from repro.hwmodel.faults import FaultModel, is_null as _fault_is_null
 
 NEG_INF = -1e30  # finite mask value: keeps CAM index math NaN-free
 
@@ -51,6 +52,7 @@ class SoftmaxConfig:
     kind: str = "star"
     fmt: FixedPointFormat = DEFAULT_FORMAT
     mode: str = "gather"  # star lowering: gather | onehot | histogram
+    fault: Optional["FaultModel"] = None  # device non-idealities (§9)
 
     def __post_init__(self):
         if self.kind not in ("exact", "star", "star_ste"):
@@ -62,7 +64,10 @@ class SoftmaxConfig:
         core is a dispatch *target*, the specs live a layer above)."""
         if spec.kind == "exact":
             return cls(kind="exact")
-        return cls(kind=spec.kind, fmt=spec.fmt, mode=spec.mode)
+        return cls(
+            kind=spec.kind, fmt=spec.fmt, mode=spec.mode,
+            fault=getattr(spec, "fault", None),
+        )
 
     def apply(self, scores: jax.Array, where: Optional[jax.Array] = None) -> jax.Array:
         if self.kind == "exact":
@@ -73,8 +78,11 @@ class SoftmaxConfig:
             if where is not None:
                 scores = jnp.where(where, scores, NEG_INF)
             # NEG_INF scores quantize to the deepest LUT row (prob ~ 0).
-            return star_softmax_ste(scores, self.fmt, -1, self.mode)
-        return star_softmax(scores, self.fmt, axis=-1, mode=self.mode, where=where)
+            return star_softmax_ste(scores, self.fmt, -1, self.mode, self.fault)
+        return star_softmax(
+            scores, self.fmt, axis=-1, mode=self.mode, where=where,
+            fault=self.fault,
+        )
 
 
 EXACT_SOFTMAX = SoftmaxConfig(kind="exact")
@@ -177,6 +185,14 @@ def blocked_attention(
     paper's two-pass global-max semantics much more closely since the
     paper finds the global max *before* any LUT lookup).
     """
+    if not _fault_is_null(softmax.fault):
+        raise ValueError(
+            "blocked_attention cannot inject cell faults: the online "
+            "rescale identity lut[a] * lut[b] == lut[a + b] does not hold "
+            "for a faulty LUT, so the pipeline would not model any "
+            "physical engine.  Use the whole-operand attention() (the "
+            "dispatch layer routes faulty specs there automatically)."
+        )
     b, tq, hq, d = q.shape
     _, tk, hkv, _ = k.shape
     scale = (d ** -0.5) if scale is None else scale

@@ -24,6 +24,16 @@ order:
 Training: ``star_softmax_ste`` keeps the quantized forward and routes
 gradients through the exact softmax vjp evaluated at the *quantized*
 probabilities (quantization-aware training).
+
+Fault injection (DESIGN.md §9): an optional :class:`FaultModel` perturbs
+the physical arrays each stage reads — the CAM match (broken rows remap to
+the nearest working row), the numerator LUT, the denominator VMM crossbar
+(an independent realization of the same contents), and the shared ADC
+(denominator gain).  ``gather``/``onehot`` modes sum the faulty numerators
+digitally, so only the LUT/CAM sites apply there; ``histogram`` mode runs
+the denominator through the VMM + ADC sites too — under faults the three
+modes are *deliberately* no longer equivalent, because the hardware paths
+they model differ.
 """
 
 from __future__ import annotations
@@ -35,6 +45,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
+from repro.hwmodel import faults as faults_lib
+from repro.hwmodel.faults import FaultModel
 from repro.core.fixedpoint import (
     DEFAULT_FORMAT,
     GRID_SENTINEL,
@@ -66,16 +78,21 @@ def star_softmax(
     mode: str = "histogram",
     where: Optional[jax.Array] = None,
     dtype: Optional[jnp.dtype] = None,
+    fault: Optional[FaultModel] = None,
 ) -> jax.Array:
     """Quantized LUT softmax along ``axis``.
 
     ``where`` masks entries out of the softmax (masked entries get
     probability 0 and do not enter the denominator) — needed for attention
     masking, where the paper's engine simply never streams masked scores.
+
+    ``fault`` injects the seeded device non-idealities of DESIGN.md §9
+    into the CAM/LUT/VMM/ADC stages (``None`` = ideal device).
     """
     if mode not in Modes:
         raise ValueError(f"mode must be one of {Modes}, got {mode!r}")
     out_dtype = dtype or (x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32)
+    faulty = not faults_lib.is_null(fault)
 
     xf = x.astype(jnp.float32)
     moved, orig_axis = _move_axis_last(xf, axis)
@@ -92,7 +109,14 @@ def star_softmax(
     m = jnp.max(j, axis=-1, keepdims=True)  # CAM max search (integer)
     k = grid_index(j, m, fmt)  # SUB crossbar + CAM match
 
-    table = lut_lib.exp_lut(fmt, dtype=jnp.float32)
+    if faulty:
+        remap = faults_lib.cam_remap(fmt, fault)
+        if remap is not None:
+            # broken CAM rows match the nearest working codebook row
+            k = lut_lib.lookup_gather(k, remap)
+        table = faults_lib.faulty_exp_lut(fmt, fault, tag="softmax/lut")
+    else:
+        table = lut_lib.exp_lut(fmt, dtype=jnp.float32)
     if mode == "onehot":
         num = lut_lib.lookup_onehot(k, table)
     else:
@@ -107,8 +131,21 @@ def star_softmax(
         else:
             # Masked entries must not be counted: weight the one-hot rows.
             counts = _weighted_histogram(k, wmask, fmt.num_levels)
-        den = lut_lib.histogram_dot(counts, table)[..., None]
+        # the denominator VMM crossbar holds an independent copy of the
+        # LUT contents — its own fault realization and ADC
+        vmm_table = (
+            faults_lib.faulty_exp_lut(fmt, fault, tag="softmax/vmm")
+            if faulty
+            else table
+        )
+        den = lut_lib.histogram_dot(counts, vmm_table)[..., None]
+        if faulty:
+            gain = faults_lib.adc_gain(fault)
+            if gain is not None:
+                den = den * gain
     else:
+        # gather/onehot sum the numerators digitally: LUT faults propagate,
+        # no separate VMM/ADC site exists on this path
         den = jnp.sum(num, axis=-1, keepdims=True)
 
     den = jnp.where(den <= 0.0, 1.0, den)  # fully-masked rows -> zeros
@@ -124,29 +161,32 @@ def _weighted_histogram(k: jax.Array, weight_mask: jax.Array, num_levels: int) -
     return jnp.sum(onehot, axis=-2)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
 def star_softmax_ste(
     x: jax.Array,
     fmt: FixedPointFormat = DEFAULT_FORMAT,
     axis: int = -1,
     mode: str = "histogram",
+    fault: Optional[FaultModel] = None,
 ) -> jax.Array:
     """STAR softmax with a straight-through backward.
 
     Backward uses the exact softmax vjp evaluated at the quantized forward
     probabilities: ``dx = p * (g - sum(g * p))``.  This is the standard QAT
     treatment — the quantizer is transparent to the gradient, the softmax
-    geometry is kept.
+    geometry is kept.  ``fault`` (hashable, nondiff) perturbs the forward
+    only — fault-aware training sees the degraded probabilities but trains
+    through the clean geometry.
     """
-    return star_softmax(x, fmt, axis=axis, mode=mode)
+    return star_softmax(x, fmt, axis=axis, mode=mode, fault=fault)
 
 
-def _ste_fwd(x, fmt, axis, mode):
-    p = star_softmax(x, fmt, axis=axis, mode=mode)
+def _ste_fwd(x, fmt, axis, mode, fault):
+    p = star_softmax(x, fmt, axis=axis, mode=mode, fault=fault)
     return p, p
 
 
-def _ste_bwd(fmt, axis, mode, p, g):
+def _ste_bwd(fmt, axis, mode, fault, p, g):
     inner = jnp.sum(g * p, axis=axis, keepdims=True)
     return ((p * (g - inner)).astype(g.dtype),)
 

@@ -44,8 +44,17 @@ def cam_crossbar(rows: int, cols: int) -> XbarCost:
 
 
 def lut_crossbar(rows: int, cols: int) -> XbarCost:
-    """LUT read = one-hot driven row read (cheaper than full VMM: one row)."""
+    """LUT read = one-hot driven row read (cheaper than full VMM: one row).
+
+    Power audit (golden-locked in tests/test_hwmodel_golden.py): the LUT
+    access is a row *read* — cell settle + SA sense, the same physics the
+    per-cell read-energy constant was measured at — not a match-line
+    search, so the read-power denominator is ``XBAR_READ_TIME``.  The
+    engine still *issues* one LUT access per CAM search (banked rows keep
+    the pipeline cadence), which is why ``op_time_s`` stays at the search
+    cadence while full-duty power is per-read energy over the read time.
+    """
     area = rows * cols * C.RRAM_CELL_AREA + rows * C.DRIVER_AREA_PER_ROW + cols * C.SA_AREA_PER_COL
     e_read = cols * C.XBAR_READ_ENERGY_PER_CELL  # single active row
-    power = e_read / C.CAM_SEARCH_TIME + C.PERIPH_POWER_PER_XBAR
+    power = e_read / C.XBAR_READ_TIME + C.PERIPH_POWER_PER_XBAR
     return XbarCost(area, power, C.CAM_SEARCH_TIME)

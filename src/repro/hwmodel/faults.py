@@ -1,0 +1,245 @@
+"""Device non-ideality models for the RRAM crossbar engines.
+
+STAR's efficiency argument rests on softmax being precision-insensitive —
+but a real RRAM deployment adds error sources *beyond* quantization that
+the fixed-point analysis cannot see:
+
+* **conductance variation** — programmed conductances land lognormally
+  around their target (cycle-to-cycle / device-to-device variation);
+* **stuck-at faults** — forming failures and worn cells read as G_on
+  (always max conductance) or G_off (always zero) regardless of what was
+  programmed;
+* **ADC offset drift** — the shared SAR ADCs carry a per-instance input
+  offset (modeled in LSB units of the ADC step);
+* **read disturb** — repeated reads drift conductances toward G_off; we
+  model the *accumulated* drift as a multiplicative decay ``exp(-r)``.
+
+:class:`FaultModel` is a frozen, hashable realization description: the
+``seed`` plus per-site tags fully determine every mask and noise draw via
+explicit ``jax.random`` keys (:func:`fault_key`) — no global RNG state, so
+the same model produces bit-identical injections across calls, jit
+boundaries, and processes.  Specs carry an optional ``fault`` field
+(``repro.ops.specs``) so a fault realization rides the same dispatch
+machinery as precision: it is part of *what* is computed.
+
+Site tag convention (one realization per physical array):
+
+=================  ==================================================
+``softmax/lut``    the numerator LUT crossbar contents
+``softmax/vmm``    the denominator VMM crossbar (independent copy)
+``softmax/cam``    the CAM match array (broken rows remap — see
+                   :func:`cam_remap`)
+``softmax/adc``    the shared softmax-engine ADC (denominator gain)
+``matmul/w``       MatMul engine weight crossbar cells
+``matmul/adc``     per-tile ADC offsets of the MatMul engine
+=================  ==================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import TYPE_CHECKING, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # core imports hwmodel.faults — keep the cycle lazy
+    from repro.core.fixedpoint import FixedPointFormat
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One seeded realization of device non-idealities.
+
+    All rates/sigmas default to zero, so ``FaultModel()`` is the ideal
+    device (:attr:`is_null`); specs treat ``fault=None`` and a null model
+    identically.  Frozen + hashable: safe as a jit static arg and inside
+    frozen specs.
+    """
+
+    g_sigma: float = 0.0  # lognormal conductance variation (sigma of ln G)
+    stuck_on_rate: float = 0.0  # P(cell stuck at G_on): reads as the max value
+    stuck_off_rate: float = 0.0  # P(cell stuck at G_off): reads as zero
+    adc_offset_sigma: float = 0.0  # ADC input offset, in LSB of the ADC step
+    read_disturb: float = 0.0  # accumulated drift: G *= exp(-read_disturb)
+    seed: int = 0  # realization seed — explicit keys derive from it
+
+    def __post_init__(self) -> None:
+        for f in ("g_sigma", "adc_offset_sigma", "read_disturb"):
+            if getattr(self, f) < 0.0:
+                raise ValueError(f"{f} must be >= 0, got {getattr(self, f)}")
+        for f in ("stuck_on_rate", "stuck_off_rate"):
+            if not 0.0 <= getattr(self, f) <= 1.0:
+                raise ValueError(
+                    f"{f} must be in [0, 1], got {getattr(self, f)}"
+                )
+        if self.stuck_on_rate + self.stuck_off_rate > 1.0:
+            raise ValueError(
+                "stuck_on_rate + stuck_off_rate must be <= 1, got "
+                f"{self.stuck_on_rate} + {self.stuck_off_rate}"
+            )
+
+    @property
+    def is_null(self) -> bool:
+        """True when every non-ideality is switched off (the ideal device)."""
+        return (
+            self.g_sigma == 0.0
+            and self.stuck_on_rate == 0.0
+            and self.stuck_off_rate == 0.0
+            and self.adc_offset_sigma == 0.0
+            and self.read_disturb == 0.0
+        )
+
+    @property
+    def stuck_rate(self) -> float:
+        return self.stuck_on_rate + self.stuck_off_rate
+
+    @classmethod
+    def after_reads(
+        cls, reads: int, disturb_per_read: float, **kwargs
+    ) -> "FaultModel":
+        """Model ``reads`` accumulated read-disturb events at a per-read
+        drift rate (first-order: drifts compose multiplicatively)."""
+        return cls(read_disturb=disturb_per_read * reads, **kwargs)
+
+
+def is_null(fault: Optional[FaultModel]) -> bool:
+    """``None`` and the all-zero model both mean "ideal device"."""
+    return fault is None or fault.is_null
+
+
+def fault_key(fault: FaultModel, tag: str) -> jax.Array:
+    """Derive the jax.random key for one fault site.
+
+    ``tag`` names the physical array (see the module table); folding a
+    crc32 of each path segment keeps derivation deterministic across
+    processes (``hash()`` is salted per process — never use it here).
+    """
+    key = jax.random.PRNGKey(fault.seed)
+    for part in tag.split("/"):
+        key = jax.random.fold_in(key, zlib.crc32(part.encode()) & 0x7FFFFFFF)
+    return key
+
+
+# ---------------------------------------------------------------------------
+# cell-level injection
+
+
+def stuck_masks(
+    key: jax.Array, shape: Tuple[int, ...], fault: FaultModel
+) -> Tuple[jax.Array, jax.Array]:
+    """(stuck_on, stuck_off) boolean masks — disjoint, drawn from one
+    uniform field so the partition is exact at any rate combination."""
+    u = jax.random.uniform(key, shape)
+    on = u < fault.stuck_on_rate
+    off = (~on) & (u < fault.stuck_on_rate + fault.stuck_off_rate)
+    return on, off
+
+
+def apply_cell_faults(
+    values: jax.Array,
+    fault: FaultModel,
+    tag: str,
+    *,
+    g_on: float,
+    g_off: float = 0.0,
+) -> jax.Array:
+    """Perturb stored conductances: variation + read disturb + stuck-at.
+
+    ``values`` are the programmed array contents (LUT entries, quantized
+    weights); ``g_on``/``g_off`` are what a stuck cell *reads as* in that
+    array's value domain.  Stuck-at wins over analog noise (the cell no
+    longer responds to programming).
+    """
+    if is_null(fault):
+        return values
+    key = fault_key(fault, tag)
+    k_noise, k_stuck = jax.random.split(key)
+    out = values.astype(jnp.float32)
+    if fault.g_sigma > 0.0 or fault.read_disturb > 0.0:
+        # variation and disturb fold into ONE exponent and ONE multiply:
+        # G * exp(sigma*eps - disturb).  The short op chain keeps XLA's
+        # fusion-time contraction drift (eager vs jit) at the 1-ulp level;
+        # within one compilation regime realizations are bit-identical.
+        exponent = -jnp.float32(fault.read_disturb)
+        if fault.g_sigma > 0.0:
+            exponent = (
+                fault.g_sigma * jax.random.normal(k_noise, values.shape)
+                + exponent
+            )
+        out = out * jnp.exp(exponent)
+    if fault.stuck_rate > 0.0:
+        on, off = stuck_masks(k_stuck, values.shape, fault)
+        out = jnp.where(on, jnp.float32(g_on), out)
+        out = jnp.where(off, jnp.float32(g_off), out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# softmax-engine sites (CAM / LUT / VMM / ADC)
+
+
+def faulty_exp_lut(
+    fmt: "FixedPointFormat", fault: FaultModel, tag: str = "softmax/lut"
+) -> jax.Array:
+    """The exp LUT crossbar under faults.  G_on reads as the top entry
+    ``exp(0) = 1``; G_off as zero (the deepest row's ~0 probability)."""
+    from repro.core import lut as lut_lib  # lazy: core imports this module
+
+    return apply_cell_faults(
+        lut_lib.exp_lut(fmt, dtype=jnp.float32), fault, tag, g_on=1.0, g_off=0.0
+    )
+
+
+def cam_remap(
+    fmt: "FixedPointFormat", fault: FaultModel, tag: str = "softmax/cam"
+) -> Optional[jax.Array]:
+    """Match-index remap table ``[num_levels] int32`` for CAM stuck faults.
+
+    A stuck CAM row cannot store its codebook pattern, so inputs that
+    should match it match the nearest *working* row instead — deeper first
+    (CAM out-of-range behaviour), shallower when no deeper row works.
+    Returns ``None`` when the CAM is fault-free (identity remap elided).
+    """
+    if is_null(fault) or fault.stuck_rate == 0.0:
+        return None
+    levels = fmt.num_levels
+    on, off = stuck_masks(fault_key(fault, tag), (levels,), fault)
+    broken = on | off
+    idx = jnp.arange(levels)
+    # nearest working row at >= k: suffix-min over candidate indices
+    cand = jnp.where(broken, levels, idx)
+    deeper = jax.lax.associative_scan(jnp.minimum, cand, reverse=True)
+    # rows with no working deeper row fall back to the nearest shallower one
+    shallower = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(broken, -1, idx)
+    )
+    remap = jnp.where(deeper < levels, deeper, jnp.maximum(shallower, 0))
+    return remap.astype(jnp.int32)
+
+
+def adc_gain(fault: FaultModel, tag: str = "softmax/adc") -> Optional[float]:
+    """Denominator gain of the softmax engine's shared ADC.
+
+    The VMM sum passes one ADC whose input offset shows up (first order)
+    as a multiplicative error on the denominator.  One scalar per
+    realization — returns a concrete jnp scalar, ``None`` when ideal.
+    """
+    if is_null(fault) or fault.adc_offset_sigma == 0.0:
+        return None
+    eps = jax.random.normal(fault_key(fault, tag), ())
+    return 1.0 + fault.adc_offset_sigma * eps
+
+
+def adc_tile_offsets(
+    fault: FaultModel, shape: Tuple[int, ...], tag: str = "matmul/adc"
+) -> Optional[jax.Array]:
+    """Per-crossbar-tile ADC input offsets in LSB units, shape ``[Kt, Nt]``.
+
+    Added to ``partial / step`` before the ADC's round+clip — exactly an
+    input-referred offset of a uniform quantizer.
+    """
+    if is_null(fault) or fault.adc_offset_sigma == 0.0:
+        return None
+    return fault.adc_offset_sigma * jax.random.normal(fault_key(fault, tag), shape)

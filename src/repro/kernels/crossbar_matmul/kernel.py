@@ -18,7 +18,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.crossbar_matmul.ref import CrossbarSpec, DEFAULT_SPEC
 
 
-def _kernel(x_ref, w_ref, step_ref, o_ref, acc, *, adc_levels: int):
+def _kernel(x_ref, w_ref, step_ref, off_ref, o_ref, acc, *, adc_levels: int):
     kt = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -33,7 +33,9 @@ def _kernel(x_ref, w_ref, step_ref, o_ref, acc, *, adc_levels: int):
         preferred_element_type=jnp.float32,
     )
     st = step_ref[0, 0]
-    adc = jnp.clip(jnp.round(partial / st), -adc_levels, adc_levels) * st
+    # per-tile ADC input-referred offset (fault injection; zero when ideal)
+    code = partial / st + off_ref[0, 0]
+    adc = jnp.clip(jnp.round(code), -adc_levels, adc_levels) * st
     acc[...] += adc
 
     @pl.when(kt == nk - 1)
@@ -44,8 +46,9 @@ def _kernel(x_ref, w_ref, step_ref, o_ref, acc, *, adc_levels: int):
 @functools.partial(jax.jit, static_argnames=("spec", "block_m", "interpret"))
 def crossbar_matmul_pallas(
     xq: jax.Array,  # int8/int32 quantized activations [M, K], K % tile_rows == 0
-    wq: jax.Array,  # int8/int32 quantized weights [K, N], N % tile_cols == 0
+    wq: jax.Array,  # quantized weights [K, N], N % tile_cols == 0 (f32 if faulty)
     step: jax.Array,  # f32 [Kt, Nt] ADC step per crossbar tile
+    offsets: jax.Array | None = None,  # f32 [Kt, Nt] ADC offsets in LSB (faults)
     *,
     spec: CrossbarSpec = DEFAULT_SPEC,
     block_m: int = 128,
@@ -55,6 +58,8 @@ def crossbar_matmul_pallas(
     _, n = wq.shape
     ktiles = kdim // spec.tile_rows
     ntiles = n // spec.tile_cols
+    if offsets is None:
+        offsets = jnp.zeros((ktiles, ntiles), jnp.float32)
     bm = min(block_m, m)
     pad_m = (-m) % bm
     if pad_m:
@@ -69,9 +74,10 @@ def crossbar_matmul_pallas(
             pl.BlockSpec((bm, spec.tile_rows), lambda i, j, k: (i, k)),
             pl.BlockSpec((spec.tile_rows, spec.tile_cols), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, 1), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, spec.tile_cols), lambda i, j, k: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, spec.tile_cols), jnp.float32)],
         interpret=interpret,
-    )(xq, wq, step)
+    )(xq, wq, step, offsets)
     return out[:m]

@@ -19,9 +19,13 @@ performance path of the framework uses native MXU matmuls.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.hwmodel import faults as faults_lib
+from repro.hwmodel.faults import FaultModel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,25 +100,54 @@ def adc_step(
     return (jnp.maximum(fullscale, 1.0) / spec.adc_levels).astype(jnp.float32)
 
 
+def apply_weight_faults(
+    wq: jax.Array, spec: CrossbarSpec, fault: Optional[FaultModel]
+) -> jax.Array:
+    """Perturb the stored (padded, quantized) weight array with cell faults.
+
+    Weights are the programmed conductances: lognormal variation and read
+    disturb scale them, stuck-at-G_on reads as the top code ``2^(b-1)-1``
+    and stuck-at-G_off as zero (differential-pair sign handling is folded
+    into this single-array behavioural view — a documented simplification,
+    consistent with the 8-bit single-array quantization above).  Returns
+    float32: faulty conductances are off-grid by construction.
+    """
+    if faults_lib.is_null(fault):
+        return wq
+    w_top = float((1 << (spec.weight_bits - 1)) - 1)
+    return faults_lib.apply_cell_faults(
+        wq.astype(jnp.float32), fault, "matmul/w", g_on=w_top, g_off=0.0
+    )
+
+
 def crossbar_matmul_ref(
     x: jax.Array,
     w: jax.Array,
     spec: CrossbarSpec = DEFAULT_SPEC,
     ranging: str = "calibrated",
+    fault: Optional[FaultModel] = None,
 ) -> jax.Array:
-    """x [M, K] @ w [K, N] through the crossbar model (float32 out)."""
+    """x [M, K] @ w [K, N] through the crossbar model (float32 out).
+
+    ``fault`` injects seeded device non-idealities (DESIGN.md §9): cell
+    faults on the stored weights plus per-tile ADC offsets.  Calibrated
+    ranging observes the *faulty* array — a deployed design calibrates
+    its ADC ranges after the faults exist.
+    """
     m, kdim = x.shape
     _, n = w.shape
     (xq, sx), (wq, sw) = quantize_operands(x, w, spec)
 
     xq = _pad_to(xq, 1, spec.tile_rows)
     wq = _pad_to(_pad_to(wq, 0, spec.tile_rows), 1, spec.tile_cols)
+    wq = apply_weight_faults(wq, spec, fault)
     kt = xq.shape[1] // spec.tile_rows
     nt = wq.shape[1] // spec.tile_cols
 
     xtiles = xq.reshape(m, kt, spec.tile_rows)
     wtiles = wq.reshape(kt, spec.tile_rows, nt, spec.tile_cols)
     step = adc_step(xq, wq, spec, ranging)  # [kt, nt]
+    offsets = faults_lib.adc_tile_offsets(fault, (kt, nt)) if fault else None
 
     acc = jnp.zeros((m, nt, spec.tile_cols), jnp.float32)
     for k in range(kt):
@@ -123,7 +156,10 @@ def crossbar_matmul_ref(
             wtiles[k].astype(jnp.float32),
         )  # exact integer-valued partial
         st = step[k][None, :, None]
-        adc = jnp.clip(jnp.round(partial / st), -spec.adc_levels, spec.adc_levels) * st
+        code = partial / st
+        if offsets is not None:
+            code = code + offsets[k][None, :, None]  # input-referred offset
+        adc = jnp.clip(jnp.round(code), -spec.adc_levels, spec.adc_levels) * st
         acc = acc + adc
     out = acc.reshape(m, nt * spec.tile_cols)[:, :n]
     return out * (sx * sw)

@@ -31,6 +31,12 @@ from repro.ops.dispatch import (  # noqa: F401
     ssd_scan,
     validate,
 )
+from repro.hwmodel.faults import FaultModel  # noqa: F401
+from repro.ops.guard import (  # noqa: F401
+    AccuracyGuard,
+    GuardConfig,
+    GuardTripWarning,
+)
 from repro.ops.platform import (  # noqa: F401
     default_interpret,
     detected_platform,

@@ -22,6 +22,7 @@ from typing import Any, Optional, Tuple
 import jax
 
 from repro.ops import registry
+from repro.ops.guard import Guard, as_guard
 from repro.ops.platform import resolve_interpret
 from repro.ops.registry import Backend, OpDispatchError
 from repro.ops.specs import (
@@ -77,10 +78,20 @@ def softmax(
     *,
     where: Optional[jax.Array] = None,
     axis: int = -1,
+    guard: Optional[Guard] = None,
     **overrides: Any,
 ) -> jax.Array:
-    """Softmax over ``axis`` through the registered backend for ``spec``."""
+    """Softmax over ``axis`` through the registered backend for ``spec``.
+
+    ``guard`` (an :class:`~repro.ops.guard.AccuracyGuard` or
+    :class:`~repro.ops.guard.GuardConfig`) wraps the call in the accuracy
+    guard: sampled comparison against the exact oracle, fallback to a clean
+    backend on tolerance violation.  Eager call sites only.
+    """
     backend, spec = resolve(spec if spec is not None else DEFAULT_SOFTMAX, **overrides)
+    g = as_guard(guard)
+    if g is not None:
+        return g.softmax(backend, spec, x, where=where, axis=axis)
     return backend.fn(spec, x, where=where, axis=axis)
 
 
@@ -143,10 +154,19 @@ def matmul(
     x: jax.Array,
     w: jax.Array,
     spec: Optional[MatmulSpec] = None,
+    *,
+    guard: Optional[Guard] = None,
     **overrides: Any,
 ) -> jax.Array:
-    """x [M, K] @ w [K, N] through the registered backend for ``spec``."""
+    """x [M, K] @ w [K, N] through the registered backend for ``spec``.
+
+    ``guard`` as in :func:`softmax` (matmul uses a relative max-abs error
+    metric against the exact f32 product).
+    """
     backend, spec = resolve(spec if spec is not None else DEFAULT_MATMUL, **overrides)
+    g = as_guard(guard)
+    if g is not None:
+        return g.matmul(backend, spec, x, w)
     return backend.fn(spec, x, w)
 
 

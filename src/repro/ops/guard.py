@@ -1,0 +1,221 @@
+"""Accuracy-guarded dispatch: compare against the exact oracle, fall back.
+
+The fault layer (DESIGN.md §9) makes degraded hardware expressible; this
+module makes it *survivable*.  An :class:`AccuracyGuard` attached to a
+dispatch call (``ops.softmax(x, spec, guard=g)``) re-runs a sampled
+fraction of calls through the exact reference oracle and, when the
+observed error exceeds the spec's tolerance contract, emits a structured
+:class:`GuardTripWarning` and re-dispatches the call on a *clean* backend
+(fault stripped, ``fallback_impl``).  Counters (calls / checks / trips /
+fallbacks / last error) live on the guard instance, and the serving engine
+surfaces them in ``ContinuousBatchingEngine.stats()`` — a production knob:
+a drifting RRAM part degrades to the digital path instead of silently
+serving garbage.
+
+The guard is a *host-side* mechanism: it needs concrete arrays to measure
+error against the oracle.  Inside ``jit``/``vmap`` tracing the comparison
+is impossible, so guarded dispatch raises an actionable error rather than
+silently not checking — guard at the eager serving layer (sampling,
+admission) and let jitted inner loops run unguarded.
+
+Latching: after the first trip the guard routes every subsequent guarded
+call straight to the clean backend (``latch=True``, the default) — the
+graceful-degradation mode.  ``latch=False`` keeps probing the faulty
+backend, which is what accuracy sweeps want.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops import registry
+from repro.ops.registry import OpDispatchError
+
+
+class GuardTripWarning(UserWarning):
+    """A guarded dispatch exceeded its tolerance and fell back.
+
+    Structured: ``op``, ``impl``, ``error``, ``tolerance``, and
+    ``fallback_impl`` are attributes, not just message text.
+    """
+
+    def __init__(
+        self, op: str, impl: str, error: float, tolerance: float, fallback_impl: str
+    ):
+        self.op = op
+        self.impl = impl
+        self.error = error
+        self.tolerance = tolerance
+        self.fallback_impl = fallback_impl
+        super().__init__(
+            f"{op} backend {impl!r} exceeded its accuracy contract "
+            f"(error {error:.3e} > tolerance {tolerance:.3e}); falling "
+            f"back to the clean {fallback_impl!r} backend"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Policy half of the guard (frozen; counters live on AccuracyGuard).
+
+    ``sample_every``: check every Nth guarded call against the oracle
+    (1 = every call).  Deterministic counter-based sampling — no RNG, so
+    a replayed trace checks the same calls.
+    ``tolerance``: override the error budget; ``None`` uses the spec's own
+    contract (``SoftmaxSpec.tolerance()``) for softmax and
+    ``matmul_rtol`` (relative max-abs) for matmul.
+    ``fallback_impl``: backend the guard re-dispatches to, with the fault
+    stripped from the spec; ``None`` picks the op's clean default
+    (``"reference"`` for softmax, ``"xla"`` for matmul).
+    ``latch``: once tripped, stop dispatching the degraded backend at all.
+    """
+
+    sample_every: int = 1
+    tolerance: Optional[float] = None
+    fallback_impl: Optional[str] = None
+    latch: bool = True
+    matmul_rtol: float = 0.05
+
+    def __post_init__(self) -> None:
+        if self.sample_every < 1:
+            raise ValueError(
+                f"sample_every must be >= 1, got {self.sample_every}"
+            )
+        if self.tolerance is not None and self.tolerance <= 0.0:
+            raise ValueError(f"tolerance must be > 0, got {self.tolerance}")
+
+
+class AccuracyGuard:
+    """Stateful guard: counters + trip latch.  Reuse one instance across
+    calls — a fresh guard per call cannot accumulate stats or latch."""
+
+    def __init__(self, config: GuardConfig = GuardConfig()):
+        self.config = config
+        self.calls = 0  # guarded dispatches seen
+        self.checks = 0  # oracle comparisons actually run
+        self.trips = 0  # tolerance violations observed
+        self.fallbacks = 0  # calls served by the clean backend
+        self.tripped = False  # latch state
+        self.last_error: Optional[float] = None
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "calls": self.calls,
+            "checks": self.checks,
+            "trips": self.trips,
+            "fallbacks": self.fallbacks,
+            "tripped": self.tripped,
+            "last_error": self.last_error,
+        }
+
+    # -- internals -----------------------------------------------------------
+
+    def _should_check(self) -> bool:
+        return (self.calls - 1) % self.config.sample_every == 0
+
+    def _fallback_impl(self, op: str) -> str:
+        if self.config.fallback_impl is not None:
+            return self.config.fallback_impl
+        return "reference" if op == "softmax" else "xla"
+
+    @staticmethod
+    def _require_concrete(x: jax.Array, op: str) -> None:
+        if isinstance(x, jax.core.Tracer):
+            raise OpDispatchError(
+                f"guarded ops.{op} was called under jit/vmap tracing: the "
+                "accuracy guard compares concrete outputs against the exact "
+                "oracle on the host.  Guard eager call sites (e.g. the "
+                "serving layer's sampling path) and leave traced inner "
+                "loops unguarded."
+            )
+
+    def _trip(self, op: str, impl: str, err: float, tol: float) -> None:
+        self.trips += 1
+        self.tripped = True
+        warnings.warn(
+            GuardTripWarning(op, impl, err, tol, self._fallback_impl(op)),
+            stacklevel=4,
+        )
+
+    # -- guarded ops ---------------------------------------------------------
+
+    def softmax(self, backend, spec, x, *, where=None, axis=-1):
+        """Guarded softmax dispatch (called by ``repro.ops.dispatch``)."""
+        self._require_concrete(x, "softmax")
+        cfg = self.config
+        fb = self._fallback_impl("softmax")
+        clean = dataclasses.replace(spec, fault=None, impl=fb)
+        clean_fn = registry.get("softmax", fb).fn
+        if self.tripped and cfg.latch:
+            self.calls += 1
+            self.fallbacks += 1
+            return clean_fn(clean, x, where=where, axis=axis)
+        out = backend.fn(spec, x, where=where, axis=axis)
+        self.calls += 1
+        if not self._should_check():
+            return out
+        self.checks += 1
+        exact = dataclasses.replace(
+            clean, kind="exact", precision=spec.precision
+        )
+        ref = registry.get("softmax", fb).fn(exact, x, where=where, axis=axis)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref)))
+        self.last_error = err
+        tol = cfg.tolerance if cfg.tolerance is not None else spec.tolerance()
+        if err > tol:
+            self._trip("softmax", spec.impl, err, tol)
+            self.fallbacks += 1
+            return clean_fn(clean, x, where=where, axis=axis)
+        return out
+
+    def matmul(self, backend, spec, x, w):
+        """Guarded matmul dispatch: relative max-abs error vs exact."""
+        self._require_concrete(x, "matmul")
+        cfg = self.config
+        fb = self._fallback_impl("matmul")
+        clean = dataclasses.replace(spec, fault=None, impl=fb)
+        clean_fn = registry.get("matmul", fb).fn
+        if self.tripped and cfg.latch:
+            self.calls += 1
+            self.fallbacks += 1
+            return clean_fn(clean, x, w)
+        out = backend.fn(spec, x, w)
+        self.calls += 1
+        if not self._should_check():
+            return out
+        self.checks += 1
+        ref = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+        denom = float(jnp.max(jnp.abs(ref))) or 1.0
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref))) / denom
+        self.last_error = err
+        tol = cfg.tolerance if cfg.tolerance is not None else cfg.matmul_rtol
+        if err > tol:
+            self._trip("matmul", spec.impl, err, tol)
+            self.fallbacks += 1
+            return clean_fn(clean, x, w)
+        return out
+
+
+Guard = Union[AccuracyGuard, GuardConfig]
+
+
+def as_guard(guard: Optional[Guard]) -> Optional[AccuracyGuard]:
+    """Normalize the dispatch-level ``guard=`` argument.
+
+    Accepts an :class:`AccuracyGuard` (reused — counters accumulate), a
+    :class:`GuardConfig` (wrapped fresh: convenient but stateless across
+    calls), or ``None``.
+    """
+    if guard is None or isinstance(guard, AccuracyGuard):
+        return guard
+    if isinstance(guard, GuardConfig):
+        return AccuracyGuard(guard)
+    raise OpDispatchError(
+        f"guard must be an AccuracyGuard, GuardConfig, or None; got "
+        f"{type(guard).__name__}"
+    )

@@ -34,8 +34,14 @@ from repro.core.attention import (
     blocked_attention,
 )
 from repro.core.star_softmax import exact_softmax, star_softmax, star_softmax_ste
+from repro.hwmodel import faults as faults_lib
 from repro.kernels.crossbar_matmul.kernel import crossbar_matmul_pallas
-from repro.kernels.crossbar_matmul.ref import _pad_to, adc_step, quantize_operands
+from repro.kernels.crossbar_matmul.ref import (
+    _pad_to,
+    adc_step,
+    apply_weight_faults,
+    quantize_operands,
+)
 from repro.kernels.flash_star.kernel import flash_star_attention
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
 from repro.kernels.star_softmax.kernel import star_softmax_pallas
@@ -67,8 +73,10 @@ def _softmax_reference(
         if where is not None:
             # NEG_INF quantizes to the deepest LUT row (probability ~ 0).
             x = jnp.where(where, x, NEG_INF)
-        return star_softmax_ste(x, spec.fmt, axis, spec.mode)
-    return star_softmax(x, spec.fmt, axis=axis, mode=spec.mode, where=where)
+        return star_softmax_ste(x, spec.fmt, axis, spec.mode, spec.fault)
+    return star_softmax(
+        x, spec.fmt, axis=axis, mode=spec.mode, where=where, fault=spec.fault
+    )
 
 
 def _softmax_xla(
@@ -106,6 +114,7 @@ def _softmax_pallas(
         use_histogram=spec.mode == "histogram",
         use_mxu_lut=spec.mode == "onehot",
         interpret=spec.interpret,
+        fault=spec.fault,
     )
     if moved:
         out = jnp.moveaxis(out, -1, axis)
@@ -122,7 +131,7 @@ register(
     "softmax",
     "xla",
     _softmax_xla,
-    capabilities={"kind": ("exact",)},
+    capabilities={"kind": ("exact",), "fault": (None,)},
     description="jax.nn.softmax — the exact FP path, no quantization",
 )
 register(
@@ -176,7 +185,14 @@ def _attention_xla(
     # forces XLA into involuntary resharding of the whole cache every layer
     # (the §Perf decode finding); the materialized einsum keeps the cache
     # sharding intact and lets the partial softmax reduce with one psum.
-    if q.shape[1] == 1 or k.shape[1] <= spec.block_kv:
+    # Under faults the online-rescale identity lut[a]*lut[b] == lut[a+b]
+    # does not hold, so faulty calls always take the materialized path —
+    # which also makes xla bit-identical to reference under any FaultModel.
+    if (
+        q.shape[1] == 1
+        or k.shape[1] <= spec.block_kv
+        or spec.softmax.fault is not None
+    ):
         return _attention_reference(
             spec, q, k, v, q_offset=q_offset, kv_valid_len=kv_valid_len, scale=scale
         )
@@ -255,7 +271,8 @@ register(
     "attention",
     "pallas",
     _attention_pallas,
-    capabilities={"softmax.kind": ("star", "exact")},
+    # online-rescale kernel: no per-cell fault path (see DESIGN.md §9)
+    capabilities={"softmax.kind": ("star", "exact"), "softmax.fault": (None,)},
     description="fused flash_star TPU kernel (kernels.flash_star)",
 )
 register(
@@ -364,7 +381,8 @@ register(
     "paged_attention",
     "pallas",
     _make_paged_backend("pallas", _attention_pallas),
-    capabilities={"softmax.kind": ("star", "exact")},
+    # online-rescale kernel: no per-cell fault path (see DESIGN.md §9)
+    capabilities={"softmax.kind": ("star", "exact"), "softmax.fault": (None,)},
     description="block-table gather + fused flash_star kernel with the "
     "ragged-length info vector (kernels.flash_star)",
 )
@@ -379,17 +397,31 @@ def _matmul_xla(spec: MatmulSpec, x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def _matmul_hwmodel(spec: MatmulSpec, x: jax.Array, w: jax.Array) -> jax.Array:
-    """x [M, K] @ w [K, N] through the RRAM crossbar behavioural model."""
+    """x [M, K] @ w [K, N] through the RRAM crossbar behavioural model.
+
+    With a ``spec.fault``, the stored weights pick up seeded cell faults
+    (float32 — off the int grid by construction) and each tile's ADC an
+    input-referred offset; calibration (``adc_step``) observes the faulty
+    array, as a deployed design would.
+    """
     xbar = spec.crossbar
     n = w.shape[1]
     (xq, sx), (wq, sw) = quantize_operands(x, w, xbar)
     xq = _pad_to(xq, 1, xbar.tile_rows)
     wq = _pad_to(_pad_to(wq, 0, xbar.tile_rows), 1, xbar.tile_cols)
+    wq = apply_weight_faults(wq, xbar, spec.fault)
     step = adc_step(xq, wq, xbar, spec.ranging)
+    offsets = None
+    if spec.fault is not None:
+        kt = xq.shape[1] // xbar.tile_rows
+        nt = wq.shape[1] // xbar.tile_cols
+        offsets = faults_lib.adc_tile_offsets(spec.fault, (kt, nt))
     out = crossbar_matmul_pallas(
         xq.astype(jnp.int8) if xbar.weight_bits <= 8 else xq,
-        wq.astype(jnp.int8) if xbar.weight_bits <= 8 else wq,
+        wq if spec.fault is not None
+        else (wq.astype(jnp.int8) if xbar.weight_bits <= 8 else wq),
         step,
+        offsets,
         spec=xbar,
         block_m=spec.block_m,
         interpret=spec.interpret,
@@ -401,6 +433,7 @@ register(
     "matmul",
     "xla",
     _matmul_xla,
+    capabilities={"fault": (None,)},
     description="native MXU matmul — the performance path",
 )
 register(

@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Union
 
 from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
 from repro.core.precision import policy_for
+from repro.hwmodel.faults import FaultModel
 from repro.kernels.crossbar_matmul.ref import DEFAULT_SPEC, CrossbarSpec
 
 SOFTMAX_KINDS = ("star", "star_ste", "exact")
@@ -70,6 +71,10 @@ class SoftmaxSpec:
     precision: Precision = DEFAULT_FORMAT
     block_rows: int = 8  # pallas: row tile
     interpret: Optional[bool] = None  # None -> platform default
+    # Seeded device non-idealities (DESIGN.md §9).  None = ideal device; a
+    # null (all-zero) model normalizes to None so it cannot split jit
+    # caches or spec equality.
+    fault: Optional[FaultModel] = None
 
     op = "softmax"
 
@@ -81,6 +86,14 @@ class SoftmaxSpec:
         if self.mode not in SOFTMAX_MODES:
             raise ValueError(
                 f"softmax mode must be one of {SOFTMAX_MODES}, got {self.mode!r}"
+            )
+        if self.fault is not None and self.fault.is_null:
+            object.__setattr__(self, "fault", None)
+        if self.fault is not None and self.kind == "exact":
+            raise ValueError(
+                "kind='exact' is the digital FP oracle — there is no RRAM "
+                "array to inject faults into; use kind='star' (or drop the "
+                "fault field)"
             )
         resolve_precision(self.precision)  # fail early on bad policies
 
@@ -98,6 +111,10 @@ class SoftmaxSpec:
         (``r = 2^-frac_bits``), so every probability ratio is within
         ``e^r`` of exact: ``|p_hat - p| <= e^r - 1``.  Exact kinds get a
         float32 roundoff allowance.
+
+        The bound assumes an ideal device: injected faults can push error
+        past it — which is exactly the contract the accuracy guard
+        (``repro.ops.guard``) enforces at dispatch time.
         """
         fmt = self.fmt
         if fmt is None:
@@ -116,6 +133,10 @@ class AttentionSpec:
 
     ``ragged=True`` declares that calls will pass per-batch
     ``kv_valid_len`` vectors (continuous-batching slot pools).
+
+    ``fault`` is sugar for ``softmax=replace(softmax, fault=...)``: the
+    attention engine's RRAM arrays live in its softmax stage, so the model
+    folds into the nested spec (and wins over a fault already set there).
     """
 
     impl: str = "xla"
@@ -128,6 +149,7 @@ class AttentionSpec:
     block_kv: int = 512  # xla: scan block
     pv_int8: bool = False  # pallas: int8 P.V MXU path
     interpret: Optional[bool] = None
+    fault: Optional[FaultModel] = None  # folds into .softmax (see above)
 
     op = "attention"
 
@@ -137,6 +159,12 @@ class AttentionSpec:
         for field in ("block_q", "block_k", "block_kv"):
             if getattr(self, field) <= 0:
                 raise ValueError(f"{field} must be > 0, got {getattr(self, field)}")
+        if self.fault is not None and self.fault.is_null:
+            object.__setattr__(self, "fault", None)
+        if self.fault is not None:
+            object.__setattr__(
+                self, "softmax", dataclasses.replace(self.softmax, fault=self.fault)
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +217,7 @@ class MatmulSpec:
     ranging: str = "calibrated"  # hwmodel ADC ranging: calibrated | fullscale
     block_m: int = 128
     interpret: Optional[bool] = None
+    fault: Optional[FaultModel] = None  # crossbar cell / ADC faults (§9)
 
     op = "matmul"
 
@@ -197,6 +226,8 @@ class MatmulSpec:
             raise ValueError(
                 f"ranging must be 'calibrated' or 'fullscale', got {self.ranging!r}"
             )
+        if self.fault is not None and self.fault.is_null:
+            object.__setattr__(self, "fault", None)
 
 
 @dataclasses.dataclass(frozen=True)

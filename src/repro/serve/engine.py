@@ -80,17 +80,22 @@ def sample_token(
     key: jax.Array,
     cfg: ModelConfig,
     serve_cfg: ServeConfig,
+    guard: Optional["ops.AccuracyGuard"] = None,
 ) -> jax.Array:
     """Greedy or temperature sampling, through the STAR engine when
     configured (the quantized LUT softmax shapes the sampling distribution
-    exactly like it shapes attention rows)."""
+    exactly like it shapes attention rows).
+
+    ``guard`` routes the sampling softmax through the accuracy guard
+    (eager call sites only — it compares against the exact oracle on the
+    host, see ``repro.ops.guard``)."""
     t = serve_cfg.temperature
     if t <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / t
     spec = cfg.softmax_spec
     if serve_cfg.star_sampling and spec.kind != "exact":
-        probs = ops.softmax(scaled, spec)
+        probs = ops.softmax(scaled, spec, guard=guard)
         return jax.random.categorical(
             key, jnp.log(jnp.maximum(probs, 1e-20)), axis=-1
         ).astype(jnp.int32)
@@ -154,6 +159,11 @@ class ContinuousConfig:
     # usable blocks in the pool (scratch excluded); None sizes it to the
     # dense-equivalent capacity num_slots * ceil(cache_len / block_size)
     kv_pool_blocks: Optional[int] = None
+    # Accuracy guard on the sampling softmax (DESIGN.md §9): sampled
+    # comparison against the exact oracle, fallback to a clean backend
+    # when a degraded (faulty / over-quantized) spec exceeds tolerance.
+    # Counters surface through ``ContinuousBatchingEngine.stats()``.
+    guard: Optional["ops.GuardConfig"] = None
 
     def as_serve_config(self) -> ServeConfig:
         return ServeConfig(self.max_len, self.temperature, self.star_sampling)
@@ -263,6 +273,12 @@ class ContinuousBatchingEngine:
         self._reset_slot = jax.jit(
             self.model.reset_slot, static_argnums=(1,), donate_argnums=(0,))
         self._serve_cfg = cb_cfg.as_serve_config()
+        # one stateful guard for the engine's lifetime: counters accumulate
+        # across ticks and the trip latch persists (degraded part stays on
+        # the clean path once caught)
+        self.guard = (
+            ops.AccuracyGuard(cb_cfg.guard) if cb_cfg.guard is not None else None
+        )
         self._base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
         self._on_token = on_token
         self._inputs = np.zeros((cb_cfg.num_slots, 1), np.int32)  # next token per slot
@@ -459,6 +475,14 @@ class ContinuousBatchingEngine:
             "peak_kv_bytes": rows * row_bytes,
         }
 
+    def stats(self) -> Dict[str, Any]:
+        """Engine-level counters: ticks, KV accounting, and — when an
+        accuracy guard is configured — its trip/fallback counters
+        (calls / checks / trips / fallbacks / tripped / last_error)."""
+        out: Dict[str, Any] = {"ticks": self.ticks, "kv": self.kv_stats()}
+        out["guard"] = self.guard.stats() if self.guard is not None else None
+        return out
+
     # -- the tick (continued) ------------------------------------------------
 
     def step(self) -> List[TokenEvent]:
@@ -515,7 +539,7 @@ class ContinuousBatchingEngine:
             tok = int(sample_token(
                 logits[0, -1],
                 self._request_key(req, len(req.generated_prefix)),
-                self.cfg, self._serve_cfg,
+                self.cfg, self._serve_cfg, guard=self.guard,
             ))
             finished = self.scheduler.record_token(slot, tok)
             events.append(self._emit(slot, tok, finished))
@@ -560,9 +584,30 @@ class ContinuousBatchingEngine:
                 ])
                 keys = jax.vmap(lambda u, i: jax.random.fold_in(
                     jax.random.fold_in(self._base_key, u), i))(uids, steps)
-                sampled = np.asarray(jax.vmap(
-                    lambda lg, k: sample_token(lg, k, self.cfg, self._serve_cfg)
-                )(last[rows_ix], keys))
+                spec = self.cfg.softmax_spec
+                if (
+                    self.guard is not None
+                    and self._serve_cfg.star_sampling
+                    and spec.kind != "exact"
+                ):
+                    # guard needs concrete arrays: one batched eager
+                    # softmax over all active rows (a single oracle check
+                    # per tick), then the per-slot categorical draws
+                    scaled = (
+                        last[rows_ix].astype(jnp.float32)
+                        / self._serve_cfg.temperature
+                    )
+                    probs = ops.softmax(scaled, spec, guard=self.guard)
+                    logp = jnp.log(jnp.maximum(probs, 1e-20))
+                    sampled = np.asarray(jax.vmap(
+                        lambda k, lg: jax.random.categorical(k, lg, axis=-1)
+                    )(keys, logp)).astype(np.int32)
+                else:
+                    sampled = np.asarray(jax.vmap(
+                        lambda lg, k: sample_token(
+                            lg, k, self.cfg, self._serve_cfg
+                        )
+                    )(last[rows_ix], keys))
                 toks = {s.index: int(t) for s, t in zip(active, sampled)}
             for slot in active:
                 tok = toks[slot.index]

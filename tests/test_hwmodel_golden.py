@@ -1,0 +1,114 @@
+"""Golden-value regression locks for the analytical hardware model.
+
+``tests/test_hwmodel.py`` checks the paper's *bands* (0.06x area ±0.03 …),
+which is the right acceptance test but leaves a wide corridor where a
+silent constant or formula regression can drift undetected — the
+``lut_crossbar`` read-power audit (power divided by ``CAM_SEARCH_TIME``
+instead of ``XBAR_READ_TIME``, a ~5x overstatement of LUT power) sat
+inside the band.  This suite pins the post-audit model outputs to
+committed constants at float precision, so any change to the cost
+formulas or device constants shows up as an explicit golden update in
+review, not as an invisible walk across the band.
+
+The goldens were recomputed from the model after the audit fix; they are
+derived values, so updating a device constant legitimately moves them —
+re-derive with::
+
+    PYTHONPATH=src python -c "from repro.hwmodel.star_engine import \
+        table1, fig3; print(table1()); print(fig3())"
+"""
+
+import pytest
+
+from repro.hwmodel import constants as C
+from repro.hwmodel.crossbar import cam_crossbar, lut_crossbar, vmm_crossbar
+from repro.hwmodel.star_engine import fig3, table1
+
+REL = 1e-9  # float-precision lock: these are deterministic host floats
+
+# -- committed goldens (post lut_crossbar power audit) ----------------------
+
+TABLE1_GOLDEN = {
+    "ours_area": 0.0585392,
+    "ours_power": 0.045178181818181814,
+    "ours_area_mm2": 0.00585392,
+    "ours_power_w": 0.0074544,
+    "vs_softermax_area": 0.17739151515151513,
+    "vs_softermax_power": 0.3764848484848484,
+}
+
+FIG3_GOLDEN = {
+    "star_model": 610.9387112542746,
+    "retransformer_model": 498.2364840941855,
+    "star_vs_retransformer_model": 1.2262022769468326,
+}
+
+
+def test_table1_golden_values():
+    t = table1()
+    assert t["ours_model"]["area"] == pytest.approx(
+        TABLE1_GOLDEN["ours_area"], rel=REL
+    )
+    assert t["ours_model"]["power"] == pytest.approx(
+        TABLE1_GOLDEN["ours_power"], rel=REL
+    )
+    assert t["ours_abs"]["area_mm2"] == pytest.approx(
+        TABLE1_GOLDEN["ours_area_mm2"], rel=REL
+    )
+    assert t["ours_abs"]["power_w"] == pytest.approx(
+        TABLE1_GOLDEN["ours_power_w"], rel=REL
+    )
+    assert t["vs_softermax_model"]["area"] == pytest.approx(
+        TABLE1_GOLDEN["vs_softermax_area"], rel=REL
+    )
+    assert t["vs_softermax_model"]["power"] == pytest.approx(
+        TABLE1_GOLDEN["vs_softermax_power"], rel=REL
+    )
+
+
+def test_fig3_golden_values():
+    f = fig3()
+    for key, want in FIG3_GOLDEN.items():
+        assert f[key] == pytest.approx(want, rel=REL), key
+
+
+# -- the audited formulas themselves ----------------------------------------
+
+
+def test_lut_power_uses_read_time_denominator():
+    """The audit fix: a LUT access is a row READ (cell settle + sense at
+    ``XBAR_READ_TIME``), not a match-line search — dividing the per-read
+    energy by ``CAM_SEARCH_TIME`` overstated the read-power term 50x
+    (~5x on the total once periphery power is added)."""
+    rows, cols = 512, 16
+    lut = lut_crossbar(rows, cols)
+    e_read = cols * C.XBAR_READ_ENERGY_PER_CELL
+    assert lut.power_w == pytest.approx(
+        e_read / C.XBAR_READ_TIME + C.PERIPH_POWER_PER_XBAR, rel=REL
+    )
+    buggy = e_read / C.CAM_SEARCH_TIME + C.PERIPH_POWER_PER_XBAR
+    assert lut.power_w < buggy / 2  # far from the pre-audit value
+    # issue cadence stays at the search rate (banked rows pipeline)
+    assert lut.op_time_s == C.CAM_SEARCH_TIME
+
+
+def test_cam_power_uses_search_time_denominator():
+    rows, cols = 512, 16
+    cam = cam_crossbar(rows, cols)
+    e_search = rows * C.CAM_SEARCH_ENERGY_PER_ROW
+    assert cam.power_w == pytest.approx(
+        e_search / C.CAM_SEARCH_TIME + C.PERIPH_POWER_PER_XBAR, rel=REL
+    )
+    assert cam.op_time_s == C.CAM_SEARCH_TIME
+
+
+def test_vmm_power_formula():
+    rows, cols, n_adc = 128, 128, 4
+    vmm = vmm_crossbar(rows, cols, n_adc)
+    e_read = rows * cols * C.XBAR_READ_ENERGY_PER_CELL
+    assert vmm.power_w == pytest.approx(
+        e_read / C.XBAR_READ_TIME + n_adc * C.ADC5_POWER
+        + C.PERIPH_POWER_PER_XBAR,
+        rel=REL,
+    )
+    assert vmm.op_time_s == C.XBAR_READ_TIME

@@ -1,0 +1,167 @@
+"""Property-based invariant suite for the paged KV block pool (DESIGN.md §8).
+
+Random opcode sequences drive ``BlockPool`` through interleaved
+allocate / append / release / fork / copy-on-write traffic — the same mix
+the continuous-batching engine generates under preemption pressure — and
+the allocator invariants are checked after **every** operation:
+
+* no double-free: the free list holds no duplicates and never a live block;
+* refcounts match the live tables exactly (a block's refcount == how many
+  tables reference it);
+* conservation: free blocks + distinct live blocks == usable pool size;
+* the reserved scratch block 0 is never handed out, never freed, never in
+  any table.
+
+Runs under hypothesis when installed; otherwise the deterministic
+``_prop_fallback`` sweep (boundary draws + seeded random draws) exercises
+the same properties so tier-1 never depends on an optional package.
+"""
+
+from collections import Counter
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on hypothesis-less CI
+    from _prop_fallback import given, settings, st
+
+from repro.serve.paged import SCRATCH_BLOCK, BlockPool, PoolExhausted
+
+POOL_BLOCKS = 9  # 8 usable + scratch: small enough to hit exhaustion often
+BLOCK_SIZE = 4
+
+
+def check_invariants(pool: BlockPool) -> None:
+    free = pool._free
+    tables = pool._tables
+    refcount = pool._refcount
+
+    # no double-free: free list is duplicate-free and disjoint from live
+    assert len(free) == len(set(free)), f"duplicate ids in free list: {free}"
+    live = set()
+    for table in tables.values():
+        live.update(table)
+    assert not (set(free) & live), "block is both free and table-referenced"
+
+    # refcounts match the live tables exactly
+    expected = Counter()
+    for table in tables.values():
+        expected.update(table)
+    assert dict(refcount) == dict(expected), (refcount, expected)
+
+    # conservation: every usable block is free xor live
+    assert len(free) + len(live) == pool.usable_blocks
+    assert pool.free_blocks + pool.used_blocks == pool.usable_blocks
+
+    # scratch block 0 never escapes
+    assert SCRATCH_BLOCK not in free
+    assert SCRATCH_BLOCK not in live
+    assert all(1 <= b < pool.num_blocks for b in free)
+    assert all(1 <= b < pool.num_blocks for b in live)
+
+
+def drive(pool: BlockPool, opcodes) -> None:
+    """Decode each opcode into one pool operation (guarded so every random
+    sequence is valid traffic) and re-check all invariants after it."""
+    next_uid = 0
+    live = []  # uids owning a table, admission order
+    for code in opcodes:
+        op, arg = code % 5, code // 5
+        if op == 0:  # admission: allocate 1-3 fresh blocks
+            n = 1 + arg % 3
+            if pool.can_allocate(n):
+                blocks = pool.allocate(next_uid, n)
+                assert len(blocks) == n
+                live.append(next_uid)
+                next_uid += 1
+        elif op == 1 and live:  # decode growth: append one block
+            uid = live[arg % len(live)]
+            if pool.can_allocate(1):
+                pool.append(uid)
+        elif op == 2 and live:  # retire / preempt: release the table
+            uid = live.pop(arg % len(live))
+            pool.release(uid)
+        elif op == 3 and live:  # beam fork: share the parent's blocks
+            parent = live[arg % len(live)]
+            pool.fork(parent, next_uid)
+            live.append(next_uid)
+            next_uid += 1
+        elif op == 4 and live:  # append-only write: privatize last block
+            uid = live[arg % len(live)]
+            last = pool.table(uid)[-1]
+            if pool.refcount(last) == 1 or pool.can_allocate(1):
+                pool.ensure_writable(uid)
+        check_invariants(pool)
+    # drain: releasing everything must return the pool to pristine
+    for uid in live:
+        pool.release(uid)
+        check_invariants(pool)
+    assert pool.free_blocks == pool.usable_blocks
+    assert not pool._tables and not pool._refcount
+
+
+@settings(max_examples=200, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 10_000), min_size=1, max_size=80))
+def test_pool_invariants_random_traffic(opcodes):
+    drive(BlockPool(POOL_BLOCKS, BLOCK_SIZE), opcodes)
+
+
+@settings(max_examples=100, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 10_000), min_size=1, max_size=120))
+def test_pool_invariants_tiny_pool(opcodes):
+    # 2 usable blocks: every sequence lives at the exhaustion boundary
+    drive(BlockPool(3, BLOCK_SIZE), opcodes)
+
+
+# -- directed edge cases the random driver cannot guarantee to hit ----------
+
+
+def test_scratch_block_never_allocated_under_full_drain():
+    pool = BlockPool(POOL_BLOCKS, BLOCK_SIZE)
+    blocks = pool.allocate(1, pool.usable_blocks)  # take the whole pool
+    assert SCRATCH_BLOCK not in blocks
+    assert sorted(blocks) == list(range(1, POOL_BLOCKS))
+    with pytest.raises(PoolExhausted):
+        pool.allocate(2, 1)
+    pool.release(1)
+    check_invariants(pool)
+
+
+def test_release_is_not_double_freeable():
+    pool = BlockPool(POOL_BLOCKS, BLOCK_SIZE)
+    pool.allocate(1, 2)
+    pool.release(1)
+    with pytest.raises(KeyError):
+        pool.release(1)  # table is gone: no path to a second free
+    check_invariants(pool)
+
+
+def test_fork_keeps_shared_blocks_live():
+    pool = BlockPool(POOL_BLOCKS, BLOCK_SIZE)
+    parent = pool.allocate(1, 3)
+    child = pool.fork(1, 2)
+    assert child == parent
+    assert all(pool.refcount(b) == 2 for b in parent)
+    pool.release(1)  # parent retires; child still pins every block
+    check_invariants(pool)
+    assert pool.used_blocks == 3
+    pool.release(2)
+    check_invariants(pool)
+    assert pool.free_blocks == pool.usable_blocks
+
+
+def test_copy_on_write_privatizes_only_the_last_block():
+    pool = BlockPool(POOL_BLOCKS, BLOCK_SIZE)
+    table = pool.allocate(1, 2)
+    pool.fork(1, 2)
+    copy = pool.ensure_writable(2)
+    assert copy is not None
+    src, dst = copy
+    assert src == table[-1] and dst not in table
+    check_invariants(pool)
+    # prefix block still shared, last block exclusive per branch
+    assert pool.refcount(table[0]) == 2
+    assert pool.refcount(table[-1]) == 1 and pool.refcount(dst) == 1
+    assert pool.ensure_writable(2) is None  # already exclusive
+    check_invariants(pool)
