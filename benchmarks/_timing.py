@@ -1,0 +1,66 @@
+"""Shared benchmark timing helpers (DESIGN.md §10).
+
+Every benchmark used to hand-roll the same loop — warmup call,
+``jax.block_until_ready``, ``perf_counter`` delta — with small accidental
+differences (warmup or not, blocking or not).  One definition here means
+every benchmark times device work the same way:
+
+* :func:`time_device_fn` — the kernel-bench loop: ``warmup`` blocked
+  calls (compilation + first-touch excluded), then ``iters`` blocked
+  calls under one timer.  Returns mean seconds per call.
+* :class:`Stopwatch` — a ``with``-block wall timer for end-to-end
+  sections (a whole serve run), where the work inside blocks on its own
+  host syncs and a warmup pass would change the measurement.
+
+jax is imported lazily so importing this module (or anything that
+re-exports it) never pays jax start-up cost.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+
+def time_device_fn(
+    fn: Callable[[], Any], iters: int = 3, warmup: int = 1
+) -> float:
+    """Mean seconds per call of ``fn``, blocking on device results.
+
+    ``fn`` returns a jax array (or pytree); every call is wrapped in
+    ``jax.block_until_ready`` so async dispatch cannot hide device time.
+    ``warmup`` calls run (and block) outside the timed region, absorbing
+    compilation.
+    """
+    import jax
+
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def time_device_fn_us(
+    fn: Callable[[], Any], iters: int = 3, warmup: int = 1
+) -> float:
+    """:func:`time_device_fn` in microseconds (the kernel-bench unit)."""
+    return time_device_fn(fn, iters=iters, warmup=warmup) * 1e6
+
+
+class Stopwatch:
+    """Wall-clock timer: ``with Stopwatch() as sw: ...; sw.seconds``."""
+
+    def __init__(self) -> None:
+        self.seconds = 0.0
+
+    def __enter__(self) -> "Stopwatch":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        return False

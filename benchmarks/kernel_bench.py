@@ -18,23 +18,14 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from typing import Any, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_device_fn_us as _t
 from repro import ops
 from repro.core.fixedpoint import DEFAULT_FORMAT
-
-
-def _t(f, iters=3):
-    jax.block_until_ready(f())
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(f())
-    return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
 def _record(records, name, us, spec, **derived):

@@ -28,6 +28,11 @@ Views, printed as ``name,value,derived`` CSV (benchmarks/run.py idiom):
    their full pool; the paged engine pins its peak allocated blocks.
    Per-tick block-pool occupancy lands in the ``--json`` record so
    BENCH_*.json can track memory as well as speed.
+5. ``ttft`` / ``itl`` — per-request latency percentiles (p50/p95/p99,
+   wall seconds) sourced from the engine's obs histograms
+   (``serve.ttft_s`` / ``serve.itl_s`` / ``serve.queue_wait_s``,
+   DESIGN.md §10), printed for the continuous engines and embedded in
+   the ``--json`` record under ``latency``.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--json out.json]
 """
@@ -36,9 +41,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
+
+from benchmarks._timing import Stopwatch
 
 
 def make_trace(n_requests: int, rng: np.random.Generator, *, rate: float = 0.8):
@@ -56,6 +62,19 @@ def make_trace(n_requests: int, rng: np.random.Generator, *, rate: float = 0.8):
     return trace
 
 
+def _latency_percentiles(eng):
+    """TTFT / ITL / queue-wait percentiles (wall seconds) read from the
+    engine's obs histograms (DESIGN.md §10) — the benchmark reports what
+    the metrics layer measured, not a separately hand-rolled list."""
+    out = {}
+    for name, key in (("serve.ttft_s", "ttft"), ("serve.itl_s", "itl"),
+                      ("serve.queue_wait_s", "queue_wait")):
+        h = eng.metrics.histogram(name)
+        out[key] = {"count": h.count(), "p50": h.percentile(50),
+                    "p95": h.percentile(95), "p99": h.percentile(99)}
+    return out
+
+
 def run_lockstep(cfg, params, trace, prompts, slots, max_len):
     import jax.numpy as jnp
 
@@ -64,24 +83,23 @@ def run_lockstep(cfg, params, trace, prompts, slots, max_len):
     eng = ServeEngine(cfg, params, ServeConfig(max_len=max_len, temperature=0.0))
     useful = steps = prefills = 0
     clock = 0.0  # trace-time: batch starts after its last arrival
-    t0 = time.perf_counter()
-    for i in range(0, len(trace), slots):
-        batch = trace[i:i + slots]
-        bp = prompts[i:i + slots]
-        plen = max(r["prompt_len"] for r in batch)
-        gen = max(r["gen"] for r in batch)
-        # right-pad prompts to the batch max (lockstep needs one shape)
-        mat = np.zeros((len(batch), plen), np.int32)
-        for j, p in enumerate(bp):
-            mat[j, :len(p)] = p
-        eng.generate(jnp.asarray(mat), gen)
-        useful += sum(r["gen"] for r in batch)
-        steps += gen - 1  # token 0 of each batch comes from the prefill
-        prefills += 1
-        clock = max(clock, max(r["arrival"] for r in batch)) + 1 + (gen - 1)
-    dt = time.perf_counter() - t0
+    with Stopwatch() as sw:
+        for i in range(0, len(trace), slots):
+            batch = trace[i:i + slots]
+            bp = prompts[i:i + slots]
+            plen = max(r["prompt_len"] for r in batch)
+            gen = max(r["gen"] for r in batch)
+            # right-pad prompts to the batch max (lockstep needs one shape)
+            mat = np.zeros((len(batch), plen), np.int32)
+            for j, p in enumerate(bp):
+                mat[j, :len(p)] = p
+            eng.generate(jnp.asarray(mat), gen)
+            useful += sum(r["gen"] for r in batch)
+            steps += gen - 1  # token 0 of each batch comes from the prefill
+            prefills += 1
+            clock = max(clock, max(r["arrival"] for r in batch)) + 1 + (gen - 1)
     return {"engine": "lockstep", "tokens": useful, "steps": steps,
-            "prefills": prefills, "makespan": clock, "wall": dt}
+            "prefills": prefills, "makespan": clock, "wall": sw.seconds}
 
 
 def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
@@ -96,30 +114,30 @@ def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
     useful = 0
     occupancy = []  # per-tick allocated blocks (paged) for the JSON record
     outputs = {}
-    t0 = time.perf_counter()
     i = 0
     tick = 0
-    while i < len(trace) or not eng.scheduler.done():
-        while i < len(trace) and trace[i]["arrival"] <= tick:
-            eng.submit(prompts[i], trace[i]["gen"],
-                       arrival_time=trace[i]["arrival"])
-            useful += trace[i]["gen"]
-            i += 1
-        eng.step()
-        if eng.kv_layout == "paged":
-            occupancy.append(eng.block_pool.used_blocks)
-        tick += 1
-    dt = time.perf_counter() - t0
+    with Stopwatch() as sw:
+        while i < len(trace) or not eng.scheduler.done():
+            while i < len(trace) and trace[i]["arrival"] <= tick:
+                eng.submit(prompts[i], trace[i]["gen"],
+                           arrival_time=trace[i]["arrival"])
+                useful += trace[i]["gen"]
+                i += 1
+            eng.step()
+            if eng.kv_layout == "paged":
+                occupancy.append(eng.block_pool.used_blocks)
+            tick += 1
     outputs.update(eng.scheduler.finished)
     st = eng.kv_stats()
     # each preemption re-admission runs one extra prefill pass
     prefills = len(trace) + st.get("preemptions", 0)
     out = {"engine": f"continuous[{eng.kv_layout}]", "tokens": useful,
            "steps": eng.ticks, "prefills": prefills,
-           "makespan": float(tick), "wall": dt,
+           "makespan": float(tick), "wall": sw.seconds,
            "util": useful / max(eng.ticks * slots, 1),
            "peak_kv_bytes": st["peak_kv_bytes"],
            "kv_bytes_capacity": st["kv_bytes_capacity"],
+           "latency": _latency_percentiles(eng),
            "outputs": outputs}
     if eng.kv_layout == "paged":
         out["block_occupancy_per_tick"] = occupancy
@@ -157,6 +175,11 @@ def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
           f"prefills={cb['prefills']} makespan={cb['makespan']:.0f} "
           f"toks_per_s={cb['tokens'] / cb['wall']:.1f} "
           f"slot_util={cb['util']:.2f}")
+    for key in ("ttft", "itl"):
+        p = cb["latency"][key]
+        print(f"serve_continuous_{key}_p50_ms,{p['p50'] * 1e3:.2f},"
+              f"p95={p['p95'] * 1e3:.2f} p99={p['p99'] * 1e3:.2f} "
+              f"n={p['count']} source=obs_histograms")
 
     pg = run_continuous(cfg, params, trace, prompts, slots, max_len,
                         kv_layout="paged", kv_block_size=kv_block_size)

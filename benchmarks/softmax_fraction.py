@@ -9,22 +9,17 @@ d CAM searches + 1 VMM + 1 divide instead of d exps + a d-sum.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_device_fn
 from repro.hwmodel import constants as C
 from repro.hwmodel.star_engine import system_efficiency
 
 
 def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / iters
+    return time_device_fn(lambda: f(*args), iters=iters)
 
 
 def run(seqs=(128, 256, 512)) -> list:

@@ -12,11 +12,20 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
       --engine continuous --attn-impl paged --kv-block-size 16
 
+  # observability (DESIGN.md §10): Chrome trace + metrics snapshot
+  PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
+      --engine continuous --trace-out trace.json --metrics-out metrics.json
+
 Backend selection goes through the ``repro.ops`` registry: the config's
 specs pick the defaults, ``--attn-impl`` / ``--softmax-impl`` retarget
 every dispatch via ``ops.use(...)``, and Pallas interpret-vs-compile is
 the platform's choice (``ops.default_interpret``) — the launcher no
 longer flips any kernel flag by hand.
+
+``--trace-out`` enables the global tracer for the run and writes the
+Chrome trace-event JSON at exit (load it at https://ui.perfetto.dev);
+``--metrics-out`` writes the merged metrics snapshot (engine registry +
+process-global dispatch/guard counters).
 """
 
 from __future__ import annotations
@@ -39,10 +48,31 @@ def _frontend_kwargs(cfg, rng, batch):
     return kw
 
 
+def _write_obs(args, engine=None) -> None:
+    """Export the Chrome trace and/or metrics snapshot when requested."""
+    import json
+
+    from repro import obs
+
+    if args.trace_out:
+        tracer = obs.get_tracer()
+        tracer.export_chrome(args.trace_out)
+        print(f"wrote {len(tracer.events)} trace events to {args.trace_out} "
+              f"(load in https://ui.perfetto.dev)")
+    if args.metrics_out:
+        snap = {"global": obs.default_registry().snapshot()}
+        if engine is not None:
+            snap["engine"] = engine.stats()
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=2, default=float)
+        print(f"wrote metrics snapshot to {args.metrics_out}")
+
+
 def run_lockstep(args, cfg, params) -> int:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import obs
     from repro.serve.engine import ServeConfig, ServeEngine
 
     max_len = args.max_len or (args.prompt_len + args.gen + cfg.num_patches + 8)
@@ -53,11 +83,13 @@ def run_lockstep(args, cfg, params) -> int:
     kw = _frontend_kwargs(cfg, rng, args.batch)
 
     t0 = time.perf_counter()
-    toks, info = eng.generate(prompts, args.gen, **kw)
+    with obs.get_tracer().span("serve.generate", batch=args.batch, gen=args.gen):
+        toks, info = eng.generate(prompts, args.gen, **kw)
     dt = time.perf_counter() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s) cache_len={info['cache_len']}")
     print("sample:", np.asarray(toks[0])[:16].tolist())
+    _write_obs(args)
     return 0
 
 
@@ -99,8 +131,13 @@ def run_continuous(args, cfg, params) -> int:
         print(f"paged kv: peak {st['peak_used_blocks']}/{st['total_blocks']} "
               f"blocks ({st['peak_kv_bytes'] / 1e6:.2f} MB), "
               f"{st['preemptions']} preemptions")
+    lat = eng.metrics.histogram("serve.ttft_s")
+    if lat.count():
+        print(f"ttft p50={1e3 * lat.percentile(50):.1f}ms "
+              f"p95={1e3 * lat.percentile(95):.1f}ms (n={lat.count()})")
     first = done[min(done)]
     print("sample:", first[:16])
+    _write_obs(args, eng)
     return 0
 
 
@@ -141,11 +178,26 @@ def main() -> int:
         "--softmax-impl", default=None, metavar="IMPL",
         help="force a softmax backend (registry impl: reference|xla|pallas)",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="enable tracing for the run and write Chrome trace-event JSON "
+        "here (view at https://ui.perfetto.dev)",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="PATH",
+        help="write the metrics snapshot (engine registry + global "
+        "dispatch/guard counters) as JSON",
+    )
     args = ap.parse_args()
 
     import jax
 
-    from repro import ops
+    from repro import obs, ops
+
+    if args.trace_out:
+        # install before the engine is built — engines bind the global
+        # tracer at construction
+        obs.enable_tracing()
     from repro.configs import get_config, get_smoke_config
     from repro.models.param import materialize
     from repro.models.registry import build_model

@@ -21,6 +21,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 
+from repro.obs.metrics import default_registry as _obs_registry
 from repro.ops import registry
 from repro.ops.guard import Guard, as_guard
 from repro.ops.platform import resolve_interpret
@@ -60,6 +61,12 @@ def resolve(spec: Spec, **overrides: Any) -> Tuple[Backend, Spec]:
     spec = dataclasses.replace(spec, **updates)
     backend = registry.get(spec.op, spec.impl)
     registry.validate(backend, spec)
+    # per-(op, resolved impl) dispatch counter (DESIGN.md §10).  Counts
+    # *dispatches*: for a jitted call site that is trace time, so a cached
+    # retrace-free loop counts once — which is itself a useful signal.
+    _obs_registry().counter("ops.dispatch.calls").inc(
+        op=spec.op, impl=backend.impl
+    )
     return backend, spec
 
 

@@ -33,6 +33,8 @@ from typing import Any, Dict, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.obs import get_tracer
+from repro.obs.metrics import default_registry as _obs_registry
 from repro.ops import registry
 from repro.ops.registry import OpDispatchError
 
@@ -134,11 +136,28 @@ class AccuracyGuard:
                 "loops unguarded."
             )
 
+    # Every instance counter mirrors into the process-global obs registry
+    # (labeled by op) and trips land in the active trace (DESIGN.md §10):
+    # a guard fallback is visible in an exported Perfetto trace and in
+    # metrics snapshots, not only as a Python warning.
+
+    @staticmethod
+    def _note(event: str, op: str) -> None:
+        _obs_registry().counter(f"ops.guard.{event}").inc(op=op)
+
     def _trip(self, op: str, impl: str, err: float, tol: float) -> None:
         self.trips += 1
         self.tripped = True
+        fallback = self._fallback_impl(op)
+        _obs_registry().counter("ops.guard.trips").inc(op=op, impl=impl)
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.instant(
+                "guard.trip", cat="guard", op=op, impl=impl, error=err,
+                tolerance=tol, fallback=fallback,
+            )
         warnings.warn(
-            GuardTripWarning(op, impl, err, tol, self._fallback_impl(op)),
+            GuardTripWarning(op, impl, err, tol, fallback),
             stacklevel=4,
         )
 
@@ -154,12 +173,16 @@ class AccuracyGuard:
         if self.tripped and cfg.latch:
             self.calls += 1
             self.fallbacks += 1
+            self._note("calls", "softmax")
+            self._note("fallbacks", "softmax")
             return clean_fn(clean, x, where=where, axis=axis)
         out = backend.fn(spec, x, where=where, axis=axis)
         self.calls += 1
+        self._note("calls", "softmax")
         if not self._should_check():
             return out
         self.checks += 1
+        self._note("checks", "softmax")
         exact = dataclasses.replace(
             clean, kind="exact", precision=spec.precision
         )
@@ -170,6 +193,7 @@ class AccuracyGuard:
         if err > tol:
             self._trip("softmax", spec.impl, err, tol)
             self.fallbacks += 1
+            self._note("fallbacks", "softmax")
             return clean_fn(clean, x, where=where, axis=axis)
         return out
 
@@ -183,12 +207,16 @@ class AccuracyGuard:
         if self.tripped and cfg.latch:
             self.calls += 1
             self.fallbacks += 1
+            self._note("calls", "matmul")
+            self._note("fallbacks", "matmul")
             return clean_fn(clean, x, w)
         out = backend.fn(spec, x, w)
         self.calls += 1
+        self._note("calls", "matmul")
         if not self._should_check():
             return out
         self.checks += 1
+        self._note("checks", "matmul")
         ref = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
         denom = float(jnp.max(jnp.abs(ref))) or 1.0
         err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref))) / denom
@@ -197,6 +225,7 @@ class AccuracyGuard:
         if err > tol:
             self._trip("matmul", spec.impl, err, tol)
             self.fallbacks += 1
+            self._note("fallbacks", "matmul")
             return clean_fn(clean, x, w)
         return out
 

@@ -51,6 +51,7 @@ uid), so sampled output is also independent of pool co-tenancy.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -58,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import ops
+from repro.obs import MetricsRegistry, NullTracer, Tracer, get_tracer
 from repro.configs.base import ModelConfig
 from repro.models.registry import build_model
 from repro.models.transformer import DecoderLM
@@ -197,10 +199,37 @@ class ContinuousBatchingEngine:
         *,
         base_key: Optional[jax.Array] = None,
         on_token: Optional[Callable[[TokenEvent], None]] = None,
+        tracer: Optional[Tracer | NullTracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.cfg = model_cfg
         self.params = params
         self.cb = cb_cfg
+        # Observability (DESIGN.md §10).  The tracer binds at construction:
+        # the global no-op singleton unless obs.enable_tracing() ran first
+        # (or one is injected).  Metrics live in a per-engine registry so
+        # stats() snapshots are isolated; ``clock`` is injectable for
+        # deterministic latency tests (tests/test_obs_serve.py).
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._clock = clock if clock is not None else time.perf_counter
+        reg = self.metrics
+        self._m_submitted = reg.counter("serve.requests.submitted")
+        self._m_admitted = reg.counter(
+            "serve.requests.admitted", "admissions incl. re-admissions")
+        self._m_finished = reg.counter("serve.requests.finished")
+        self._m_preempted = reg.counter("serve.requests.preempted")
+        self._m_tokens = reg.counter("serve.tokens.generated")
+        self._h_ttft = reg.histogram(
+            "serve.ttft_s", "submit -> first token (end-to-end, survives "
+            "preemption)")
+        self._h_itl = reg.histogram(
+            "serve.itl_s", "inter-token latency per request")
+        self._h_queue = reg.histogram(
+            "serve.queue_wait_s", "pending-queue wait per admission stint")
+        self._g_queue = reg.gauge("serve.queue.depth")
+        self._g_active = reg.gauge("serve.slots.active")
         self.model = build_model(model_cfg)
         if not isinstance(self.model, DecoderLM):
             raise ValueError(
@@ -233,7 +262,9 @@ class ContinuousBatchingEngine:
             usable = cb_cfg.kv_pool_blocks
             if usable is None:
                 usable = cb_cfg.num_slots * self._slot_blocks
-            self.block_pool = BlockPool(usable + 1, bs)  # +1: scratch block 0
+            self.block_pool = BlockPool(
+                usable + 1, bs, metrics=self.metrics  # +1: scratch block 0
+            )
             if self._ring and self._slot_blocks > self.block_pool.usable_blocks:
                 raise ValueError(
                     f"a sliding-window ring needs {self._slot_blocks} blocks "
@@ -329,6 +360,18 @@ class ContinuousBatchingEngine:
         )
         if frontend:
             self._frontend[uid] = {k: jnp.asarray(v) for k, v in frontend.items()}
+        now = self._clock()
+        req = self.scheduler.pending[-1]
+        req.submit_time = req.enqueued_at = now
+        self._m_submitted.inc()
+        self._g_queue.set(len(self.scheduler.pending))
+        tracer = self.tracer
+        if tracer.enabled:
+            tracer.instant("serve.submit", uid=uid, prompt_len=len(prompt),
+                           max_new_tokens=max_new_tokens)
+            # one async track per request, open from submit to finish —
+            # Perfetto renders queue wait + every decode stint on one row
+            tracer.async_begin("request", uid)
         return uid
 
     # -- the tick -----------------------------------------------------------
@@ -349,6 +392,15 @@ class ContinuousBatchingEngine:
         req = slot.request
         index = len(req.generated_prefix) + len(slot.generated) - 1
         ev = TokenEvent(req.uid, token, index, finished)
+        now = self._clock()
+        if req.first_token_time is None:
+            if req.submit_time is not None:
+                self._h_ttft.observe(now - req.submit_time)
+            req.first_token_time = now
+        elif req.last_token_time is not None:
+            self._h_itl.observe(now - req.last_token_time)
+        req.last_token_time = now
+        self._m_tokens.inc()
         if self._on_token is not None:
             self._on_token(ev)
         return ev
@@ -360,6 +412,11 @@ class ContinuousBatchingEngine:
             self.block_pool.release(req.uid)
             self._tables[slot.index, :] = SCRATCH_BLOCK
         self.pool = self._reset_slot(self.pool, slot.index)
+        self._m_finished.inc()
+        if self.tracer.enabled:
+            self.tracer.instant("serve.finish", uid=req.uid,
+                                tokens=len(self.scheduler.finished[req.uid]))
+            self.tracer.async_end("request", req.uid)
 
     # -- paged-pool block management -----------------------------------------
 
@@ -377,6 +434,12 @@ class ContinuousBatchingEngine:
         self._tables[slot.index, :] = SCRATCH_BLOCK
         self.pool = self._reset_slot(self.pool, slot.index)
         self.preemptions += 1
+        req.enqueued_at = self._clock()  # queue-wait restarts for this stint
+        self._m_preempted.inc()
+        self.tracer.instant(
+            "serve.preempt", uid=req.uid,
+            generated=len(req.generated_prefix),
+        )
 
     def _lowest_priority_victim(self, min_uid: int) -> Optional[Slot]:
         """The active slot with the largest uid above ``min_uid`` —
@@ -476,11 +539,14 @@ class ContinuousBatchingEngine:
         }
 
     def stats(self) -> Dict[str, Any]:
-        """Engine-level counters: ticks, KV accounting, and — when an
-        accuracy guard is configured — its trip/fallback counters
+        """Engine-level counters: ticks, KV accounting, the engine's
+        metrics-registry snapshot (request lifecycle histograms, queue /
+        occupancy gauges, block-pool counters — DESIGN.md §10), and —
+        when an accuracy guard is configured — its trip/fallback counters
         (calls / checks / trips / fallbacks / tripped / last_error)."""
         out: Dict[str, Any] = {"ticks": self.ticks, "kv": self.kv_stats()}
         out["guard"] = self.guard.stats() if self.guard is not None else None
+        out["metrics"] = self.metrics.snapshot()
         return out
 
     # -- the tick (continued) ------------------------------------------------
@@ -525,17 +591,25 @@ class ContinuousBatchingEngine:
                 )
             else:
                 prefill_len = self.cb.max_len
-            logits, cache1 = self.model.prefill(
-                self.params, jnp.asarray(tokens)[None], prefill_len, **fe
-            )
-            if paged:
-                table = jnp.asarray(self._tables[slot.index, :n_blocks])
-                self.pool = self._write_slot_paged(
-                    self.pool, cache1, slot.index, table
+            now = self._clock()
+            if req.enqueued_at is not None:
+                self._h_queue.observe(now - req.enqueued_at)
+            self._m_admitted.inc()
+            if self.tracer.enabled:
+                self.tracer.instant("serve.admit", uid=req.uid,
+                                    slot=slot.index, rows=rows)
+            with self.tracer.span("serve.prefill", uid=req.uid, rows=rows):
+                logits, cache1 = self.model.prefill(
+                    self.params, jnp.asarray(tokens)[None], prefill_len, **fe
                 )
-                self._rows[slot.index] = rows
-            else:
-                self.pool = self._write_slot(self.pool, cache1, slot.index)
+                if paged:
+                    table = jnp.asarray(self._tables[slot.index, :n_blocks])
+                    self.pool = self._write_slot_paged(
+                        self.pool, cache1, slot.index, table
+                    )
+                    self._rows[slot.index] = rows
+                else:
+                    self.pool = self._write_slot(self.pool, cache1, slot.index)
             tok = int(sample_token(
                 logits[0, -1],
                 self._request_key(req, len(req.generated_prefix)),
@@ -559,6 +633,11 @@ class ContinuousBatchingEngine:
         # 3. one decode tick across the whole slot pool.
         active = self.scheduler.active_slots
         if active:
+            # begin/end (not a span) keeps the long decode body unnested;
+            # the uid list is only built when someone is recording
+            if self.tracer.enabled:
+                self.tracer.begin("serve.decode", tick=self.ticks,
+                                  uids=[s.request.uid for s in active])
             if paged:
                 logits, self.pool = self._decode_paged(
                     self.params, self.pool, jnp.asarray(self._inputs),
@@ -616,7 +695,21 @@ class ContinuousBatchingEngine:
                 self._inputs[slot.index, 0] = tok
                 if finished:
                     self._finish(slot)
+            if self.tracer.enabled:
+                self.tracer.end("serve.decode")
             self.ticks += 1
+        self._g_queue.set(len(self.scheduler.pending))
+        self._g_active.set(len(self.scheduler.active_slots))
+        if self.tracer.enabled:
+            self.tracer.counter(
+                "serve.sched",
+                pending=len(self.scheduler.pending),
+                active=len(self.scheduler.active_slots),
+            )
+            if paged:
+                self.tracer.counter(
+                    "kv.blocks", used=self.block_pool.used_blocks
+                )
         return events
 
     # -- draining -----------------------------------------------------------

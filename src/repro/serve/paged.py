@@ -33,12 +33,18 @@ makes paged greedy decode token-identical to the dense path.
   in append-only decode, so one copy per fork divergence suffices.
 
 Pure host-side bookkeeping (no jax imports) — same layering as
-:class:`~repro.serve.scheduler.SlotScheduler`.
+:class:`~repro.serve.scheduler.SlotScheduler`.  Passing a
+:class:`~repro.obs.metrics.MetricsRegistry` (``metrics=``) publishes
+``kv.blocks.allocated`` / ``kv.blocks.freed`` counters and a
+``kv.blocks.used`` gauge; with ``metrics=None`` the allocator records
+nothing (DESIGN.md §10).
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
+
+from repro.obs.metrics import MetricsRegistry
 
 SCRATCH_BLOCK = 0  # reserved id: free-slot / padding writes land here
 
@@ -54,7 +60,13 @@ class PoolExhausted(RuntimeError):
 class BlockPool:
     """Fixed-size block allocator with per-request tables and refcounts."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(
+        self,
+        num_blocks: int,
+        block_size: int,
+        *,
+        metrics: Optional[MetricsRegistry] = None,
+    ):
         if num_blocks < 2:
             raise ValueError(
                 f"num_blocks must be >= 2 (block 0 is the reserved scratch "
@@ -69,6 +81,24 @@ class BlockPool:
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._refcount: Dict[int, int] = {}
         self._tables: Dict[int, List[int]] = {}
+        self._m_alloc = metrics.counter(
+            "kv.blocks.allocated", "blocks handed out (allocate/append/CoW)"
+        ) if metrics is not None else None
+        self._m_freed = metrics.counter(
+            "kv.blocks.freed", "blocks returned to the free list"
+        ) if metrics is not None else None
+        self._m_used = metrics.gauge(
+            "kv.blocks.used", "distinct allocated blocks right now"
+        ) if metrics is not None else None
+
+    def _track(self, allocated: int = 0, freed: int = 0) -> None:
+        if self._m_used is None:
+            return
+        if allocated:
+            self._m_alloc.inc(allocated)
+        if freed:
+            self._m_freed.inc(freed)
+        self._m_used.set(self.used_blocks)
 
     # -- capacity ------------------------------------------------------------
 
@@ -115,6 +145,7 @@ class BlockPool:
         for b in blocks:
             self._refcount[b] = 1
         self._tables[uid] = blocks
+        self._track(allocated=n)
         return list(blocks)
 
     def append(self, uid: int) -> int:
@@ -129,6 +160,7 @@ class BlockPool:
         b = self._free.pop()
         self._refcount[b] = 1
         self._tables[uid].append(b)
+        self._track(allocated=1)
         return b
 
     def release(self, uid: int) -> List[int]:
@@ -142,6 +174,7 @@ class BlockPool:
                 del self._refcount[b]
                 self._free.append(b)
                 freed.append(b)
+        self._track(freed=len(freed))
         return freed
 
     # -- copy-on-fork ---------------------------------------------------------
@@ -176,6 +209,7 @@ class BlockPool:
         self._refcount[last] -= 1
         self._refcount[dst] = 1
         table[-1] = dst
+        self._track(allocated=1)
         return last, dst
 
     def refcount(self, block: int) -> int:

@@ -63,6 +63,14 @@ class Request:
     # resumes mid-stream — budget, PRNG indices, and the finished output
     # all count these tokens, so preemption is invisible to the caller.
     generated_prefix: List[int] = dataclasses.field(default_factory=list)
+    # Lifecycle timestamps, stamped by the engine's (injectable) clock for
+    # the obs layer (DESIGN.md §10).  ``enqueued_at`` restarts on each
+    # preemption (queue-wait counts every stint in the pending queue);
+    # ``submit_time`` / ``first_token_time`` never do (TTFT is end-to-end).
+    submit_time: Optional[float] = None
+    enqueued_at: Optional[float] = None
+    first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None
 
     def __post_init__(self) -> None:
         self.prompt = np.asarray(self.prompt, np.int32)
