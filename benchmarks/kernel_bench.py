@@ -83,6 +83,69 @@ def sweep_attention(records: List[Dict[str, Any]], impl_filter: Optional[str]) -
             )
 
 
+def sweep_paged_decode(
+    records: List[Dict[str, Any]], impl_filter: Optional[str]
+) -> None:
+    """Paged decode: pool size x active length, every registered backend.
+
+    Wall-time on CPU is interpret-mode noise; the column that matters is
+    ``gather_bytes`` — the counted K+V bytes the backend reads from the
+    page pool per decode step (``ops.paged_gather_bytes``).  The gather
+    adapters pay the full ``S*W*bs`` table window regardless of occupancy;
+    ``pallas_paged`` pays only live pages, so its advantage grows with
+    pool/active ratio (the ``bytes_vs_gather`` column and the summary
+    speedup rows).
+    """
+    rng = np.random.default_rng(0)
+    s, bs, hq, hkv, d = 4, 16, 4, 2, 64
+    ratios: Dict[tuple, Dict[str, int]] = {}
+    for w in (4, 16):  # table width -> per-slot pool of w*bs rows
+        n = s * w + 1  # + scratch block 0
+        q = jnp.asarray(rng.normal(size=(s, 1, hq, d)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(n, bs, hkv, d)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(n, bs, hkv, d)), jnp.float32)
+        tables = jnp.arange(1, s * w + 1, dtype=jnp.int32).reshape(s, w)
+        for live in (8, w * bs // 2, w * bs):
+            kvl = jnp.full((s,), live, jnp.int32)
+            for backend in ops.backends("paged_attention"):
+                if impl_filter and backend.impl != impl_filter:
+                    continue
+                spec = ops.validate(
+                    ops.PagedAttentionSpec(impl=backend.impl, block_size=bs)
+                )
+                us = _t(
+                    lambda: ops.paged_attention(
+                        q, kp, vp, tables, spec,
+                        kv_valid_len=kvl, kv_len=w * bs,
+                    ),
+                    iters=2,
+                )
+                gb = ops.paged_gather_bytes(
+                    backend.impl, table_width=w, block_size=bs,
+                    live_lens=[live] * s, num_kv_heads=hkv, head_dim=d,
+                )
+                ratios.setdefault((w, live), {})[backend.impl] = gb
+                _record(
+                    records,
+                    f"paged_decode_{backend.impl}_pool{w * bs}_live{live}",
+                    us, spec, gather_bytes=gb,
+                    pool_rows=w * bs, live_rows=live,
+                )
+    # interpret-normalized speedup: counted pool-read bytes, gather vs
+    # gather-free, per (pool, active) point
+    for (w, live), by_impl in sorted(ratios.items()):
+        if "xla" in by_impl and "pallas_paged" in by_impl:
+            ratio = by_impl["xla"] / by_impl["pallas_paged"]
+            row = {
+                "name": f"paged_decode_bytes_speedup_pool{w * bs}_live{live}",
+                "speedup": round(ratio, 2),
+                "gather_bytes": by_impl["xla"],
+                "pallas_paged_bytes": by_impl["pallas_paged"],
+            }
+            records.append(row)
+            print(f"{row['name']},{ratio:.2f}x,counted_pool_read_bytes")
+
+
 def sweep_matmul(records: List[Dict[str, Any]], impl_filter: Optional[str]) -> None:
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
@@ -126,13 +189,25 @@ def main(argv: Optional[List[str]] = None) -> bool:
         "--json", default=None, metavar="PATH",
         help="also write the records (incl. resolved specs) as JSON",
     )
+    ap.add_argument(
+        "--only", default=None,
+        choices=("softmax", "attention", "paged_decode", "ssd_scan", "matmul"),
+        help="run a single sweep (e.g. --only paged_decode for the "
+        "BENCH_paged_decode.json emission)",
+    )
     args = ap.parse_args(argv)
 
+    sweeps = {
+        "softmax": sweep_softmax,
+        "attention": sweep_attention,
+        "paged_decode": sweep_paged_decode,
+        "ssd_scan": sweep_ssd_scan,
+        "matmul": sweep_matmul,
+    }
     records: List[Dict[str, Any]] = []
-    sweep_softmax(records, args.impl)
-    sweep_attention(records, args.impl)
-    sweep_ssd_scan(records, args.impl)
-    sweep_matmul(records, args.impl)
+    for name, fn in sweeps.items():
+        if args.only is None or args.only == name:
+            fn(records, args.impl)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=2)

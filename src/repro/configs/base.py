@@ -178,13 +178,16 @@ class ModelConfig:
         """The paged-decode contract derived from the attention spec.
 
         The backend follows the attention impl where the mapping is
-        meaningful (reference/xla/pallas); the ``"paged"`` marker impl and
-        anything custom fall back to ``"xla"`` — the marker selects the
-        *cache layout*, the paged op picks its own math backend (overridable
-        via ``ops.use(paged_attention=...)``).
+        meaningful: ``reference``/``xla`` keep their gather adapters,
+        ``pallas`` maps to the gather-free ``pallas_paged`` decode kernel
+        (DESIGN.md §11) — the fused path on both sides of the layout.  The
+        ``"paged"`` marker impl and anything custom fall back to ``"xla"``
+        — the marker selects the *cache layout*, the paged op picks its
+        own math backend (overridable via ``ops.use(paged_attention=...)``).
         """
         base = self.attention_spec
-        impl = base.impl if base.impl in ("reference", "xla", "pallas") else "xla"
+        impl = {"reference": "reference", "xla": "xla",
+                "pallas": "pallas_paged"}.get(base.impl, "xla")
         return PagedAttentionSpec(
             impl=impl,
             softmax=base.softmax,

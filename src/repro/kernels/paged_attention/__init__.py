@@ -1,0 +1,10 @@
+"""Gather-free paged-attention decode kernel (DESIGN.md §11).
+
+The kernel consumes the block-pool KV layout *in place*: per-slot block
+tables arrive as scalar-prefetch operands and the grid's index maps
+dereference them, so no gathered ``[S, W*bs, Hkv, D]`` operand is ever
+materialized.  Registered as the ``("paged_attention", "pallas_paged")``
+backend in ``repro.ops.impls``.
+"""
+
+from repro.kernels.paged_attention.kernel import paged_flash_attention  # noqa: F401

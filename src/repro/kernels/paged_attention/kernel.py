@@ -1,0 +1,202 @@
+"""paged_flash — gather-free paged-attention decode over a block-pool cache.
+
+The gather adapters in ``repro.ops.impls`` re-materialize every slot's
+whole KV window (``jnp.take`` over the page pool -> a dense
+``[S, W*bs, Hkv, D]`` operand) before the flash kernel ever runs, so paged
+decode pays dense-attention HBM traffic *plus* the gather.  This kernel is
+the vLLM/TPU lineage answer: the per-slot block table rides in as a
+**scalar-prefetch** operand, the grid walks ``(slot, kv_head, kv_block)``,
+and each grid step's BlockSpec index map dereferences the table —
+``k_pages[tables[s, j]]`` — so the Pallas pipeline DMA-fetches exactly the
+one page that step consumes.  No gathered operand exists at any point;
+per-token HBM traffic scales with the slot's *live* length, not the pool
+width.
+
+Softmax accumulation is the flash_star online form (DESIGN.md §2): on the
+STAR path scores snap to the fixed-point grid once, the running max is an
+int32 grid index, and both the rescale factor and the probabilities are
+codebook (LUT) entries, so the result matches the two-pass engine to
+float32 rounding.  ``fmt=None`` runs the exact float32 online softmax.
+
+Layout contract (mirrors ``repro.serve.paged``):
+
+* ``q``          — ``[S, Hq, D]`` one decode token per slot;
+* ``k/v_pages``  — ``[N, bs, Hkv, D]`` the flat page pool (block 0 is the
+  scratch page: free-slot writes land there, tables of retired slots point
+  there);
+* ``block_tables`` — ``[S, W]`` int32; logical row ``i`` of slot ``s``
+  lives at ``(block_tables[s, i // bs], i % bs)``;
+* ``kv_valid``   — ``[S]`` int32 ragged valid prefix per slot.  Ring
+  (sliding-window) caches pass ``min(len, cache_t)`` exactly like the
+  dense per-slot path — wrap-around changes *where* rows live (the table),
+  never the mask, so the ring case needs no kernel support.
+
+Grid ``(S, Hkv, W)`` — KV blocks innermost so the ``(m, l, acc)`` VMEM
+scratch carries across a slot's pages; the GQA head group (``Hq // Hkv``
+query heads sharing one KV head) forms the row dimension of each score
+tile.  Steps whose block lies past ``kv_valid`` are predicated off with
+``pl.when`` AND their index map clamps to the slot's last live page, so
+consecutive steps request the same block and the Pallas pipeline elides
+the redundant DMA — masked tail blocks cost neither MXU work nor HBM
+bandwidth.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fixedpoint import GRID_SENTINEL, FixedPointFormat
+
+
+def _kernel(
+    tables_ref,  # int32 [S, W] scalar-prefetch block tables
+    valid_ref,  # int32 [S] ragged valid prefix per slot
+    q_ref,  # (1, 1, group, D)
+    k_ref,  # (1, bs, 1, D) — the one page this step consumes
+    v_ref,  # (1, bs, 1, D)
+    o_ref,  # (1, 1, group, D)
+    m_scr,  # (group,) int32 (star) / f32 (exact)
+    l_scr,  # (group,) f32
+    acc_scr,  # (group, D) f32
+    *,
+    fmt: Optional[FixedPointFormat],
+    bs: int,
+    sm_scale: float,
+):
+    s = pl.program_id(0)
+    j = pl.program_id(2)
+    nw = pl.num_programs(2)
+    star = fmt is not None
+    kv_valid = valid_ref[s]
+
+    @pl.when(j == 0)
+    def _init():
+        if star:
+            m_scr[...] = jnp.full_like(m_scr, GRID_SENTINEL)
+        else:
+            m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Whole-block skip: every row of page j is past the slot's valid
+    # prefix (free slots, table tails).  The index map already pinned the
+    # DMA to the last live page, so a skipped step moves no bytes.
+    @pl.when(j * bs < kv_valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (group, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, D)
+        v = v_ref[0, :, 0]
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (group, bs)
+
+        cols = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        mask = cols < kv_valid  # (1, bs), broadcasts over the head group
+
+        if star:
+            nl = fmt.num_levels
+            scale_fp = jnp.float32(fmt.scale)
+            jgrid = jnp.where(
+                mask, jnp.round(sc * scale_fp).astype(jnp.int32), GRID_SENTINEL
+            )
+            m_blk = jnp.max(jgrid, axis=-1)  # (group,) int32
+            m_old = m_scr[...]
+            m_new = jnp.maximum(m_old, m_blk)
+            shift = jnp.clip(m_new - m_old, 0, nl - 1)
+            r = jnp.exp(-shift.astype(jnp.float32) / scale_fp)  # LUT entry
+            kidx = jnp.clip(m_new[:, None] - jgrid, 0, nl - 1)
+            p = jnp.exp(-kidx.astype(jnp.float32) / scale_fp)  # LUT entries
+            p = jnp.where(mask, p, 0.0)
+            m_scr[...] = m_new
+        else:
+            sc = jnp.where(mask, sc, -1e30)
+            m_blk = jnp.max(sc, axis=-1)
+            m_old = m_scr[...]
+            m_new = jnp.maximum(m_old, m_blk)
+            r = jnp.exp(m_old - m_new)
+            p = jnp.exp(sc - m_new[:, None])
+            p = jnp.where(mask, p, 0.0)
+            m_scr[...] = m_new
+
+        pv = jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        l_scr[...] = l_scr[...] * r + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * r[:, None] + pv
+
+    @pl.when(j == nw - 1)
+    def _finalize():
+        den = l_scr[...]
+        den = jnp.where(den <= 0.0, 1.0, den)  # free slot: emit zeros
+        o_ref[0, 0] = (acc_scr[...] / den[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "sm_scale", "interpret")
+)
+def paged_flash_attention(
+    q: jax.Array,  # [S, Hq, D] one decode token per slot
+    k_pages: jax.Array,  # [N, bs, Hkv, D] flat page pool
+    v_pages: jax.Array,  # [N, bs, Hkv, D]
+    block_tables: jax.Array,  # [S, W] int32 page ids
+    kv_valid: jax.Array,  # [S] int32 valid prefix per slot
+    *,
+    fmt: Optional[FixedPointFormat],  # None -> exact online softmax
+    sm_scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Gather-free paged decode attention.  Returns ``[S, Hq, D]``."""
+    s, hq, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    assert hq % hkv == 0, "GQA needs Hq % Hkv == 0"
+    group = hq // hkv
+    w = block_tables.shape[1]
+    sm_scale = (d ** -0.5) if sm_scale is None else sm_scale
+
+    # Head h of q attends through KV head h // group (the flash_star
+    # convention), so the contiguous reshape groups exactly right.
+    qg = q.reshape(s, hkv, group, d)
+    tables = block_tables.astype(jnp.int32)
+    valid = kv_valid.astype(jnp.int32)
+
+    def q_map(si, hi, ji, tables, valid):
+        del ji, tables, valid
+        return (si, hi, 0, 0)
+
+    def kv_map(si, hi, ji, tables, valid):
+        # Clamp table lookups past the valid prefix to the slot's last
+        # live page: consecutive masked steps then request the *same*
+        # block, and the pipeline elides the DMA.  An all-free slot
+        # (valid == 0) pins to table column 0 — the scratch page.
+        last = jnp.maximum((valid[si] + bs - 1) // bs - 1, 0)
+        return (tables[si, jnp.minimum(ji, last)], 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s, hkv, w),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), q_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.int32 if fmt is not None else jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, bs=bs, sm_scale=sm_scale),
+        out_shape=jax.ShapeDtypeStruct((s, hkv, group, d), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(tables, valid, qg, k_pages, v_pages)
+    return out.reshape(s, hq, d)

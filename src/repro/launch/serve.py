@@ -157,7 +157,8 @@ def main() -> int:
         "--attn-impl", default=None, metavar="IMPL",
         help="force an attention backend (registry impl: reference|xla|pallas; "
         "'paged' additionally flips the continuous engine to the block-pool "
-        "KV cache)",
+        "KV cache; 'pallas_paged' selects the block-pool cache AND routes "
+        "decode through the gather-free scalar-prefetch kernel)",
     )
     ap.add_argument(
         "--kv-layout", choices=("dense", "paged"), default="dense",
@@ -203,13 +204,21 @@ def main() -> int:
     from repro.models.registry import build_model
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    attn_impl = args.attn_impl
+    overrides = {}
+    if attn_impl == "pallas_paged":
+        # the gather-free paged decode kernel (DESIGN.md §11): flip the
+        # serve stack to the block-pool cache and retarget the paged op;
+        # dense invocations (prefill, lockstep) keep the marker's xla math
+        ops.validate(cfg.paged_attention_spec, impl="pallas_paged")
+        overrides["paged_attention"] = "pallas_paged"
+        attn_impl = "paged"
     # fail fast on a spec the registry cannot serve, before any lowering
-    ops.validate(cfg.attention_spec, impl=args.attn_impl or cfg.attention_spec.impl)
+    ops.validate(cfg.attention_spec, impl=attn_impl or cfg.attention_spec.impl)
     ops.validate(cfg.softmax_spec, impl=args.softmax_impl or cfg.softmax_spec.impl)
 
-    overrides = {}
-    if args.attn_impl:
-        overrides["attention"] = args.attn_impl
+    if attn_impl:
+        overrides["attention"] = attn_impl
     if args.softmax_impl:
         overrides["softmax"] = args.softmax_impl
     with ops.use(**overrides):

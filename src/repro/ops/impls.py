@@ -43,6 +43,7 @@ from repro.kernels.crossbar_matmul.ref import (
     quantize_operands,
 )
 from repro.kernels.flash_star.kernel import flash_star_attention
+from repro.kernels.paged_attention.kernel import paged_flash_attention
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
 from repro.kernels.star_softmax.kernel import star_softmax_pallas
 from repro.ops.registry import CapabilityError, register
@@ -386,6 +387,83 @@ register(
     description="block-table gather + fused flash_star kernel with the "
     "ragged-length info vector (kernels.flash_star)",
 )
+
+
+def _paged_pallas_paged(
+    spec: PagedAttentionSpec,
+    q: jax.Array,  # [S, Tq(=1), Hq, D]
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    *,
+    kv_valid_len: jax.Array,
+    kv_len: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Gather-free decode: the kernel walks the block table in place."""
+    if q.shape[1] != 1:
+        raise CapabilityError(
+            "paged_attention backend 'pallas_paged' is a decode kernel "
+            f"(one query token per slot); got Tq={q.shape[1]}. Use a "
+            "gather backend for multi-token paged queries."
+        )
+    valid = kv_valid_len.astype(jnp.int32)
+    if kv_len is not None:
+        # ring caches: the live window is the valid prefix of the buffer
+        valid = jnp.minimum(valid, jnp.int32(kv_len))
+    out = paged_flash_attention(
+        q[:, 0],
+        k_pages,
+        v_pages,
+        block_tables,
+        valid,
+        fmt=spec.softmax.fmt,  # None for the exact kind
+        sm_scale=scale,
+        interpret=spec.interpret,
+    )
+    return out[:, None]
+
+
+register(
+    "paged_attention",
+    "pallas_paged",
+    _paged_pallas_paged,
+    # same fused-kernel envelope as flash_star: no per-cell fault path
+    capabilities={"softmax.kind": ("star", "exact"), "softmax.fault": (None,)},
+    description="gather-free scalar-prefetch decode kernel: the grid "
+    "walks (slot, kv_head, kv_block) and DMA-fetches only table-named "
+    "pages (kernels.paged_attention)",
+)
+
+
+def paged_gather_bytes(
+    impl: str,
+    *,
+    table_width: int,
+    block_size: int,
+    live_lens,
+    num_kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 4,
+) -> int:
+    """Counted K+V bytes one paged decode step reads from the page pool.
+
+    The gather adapters (``reference``/``xla``/``pallas``) materialize
+    every slot's whole table window — ``S * W * bs`` rows — before the
+    dense kernel runs.  ``pallas_paged`` DMA-fetches only each slot's live
+    pages: ``sum(ceil(live / bs)) * bs`` rows (free slots still touch the
+    one clamped page, matching the kernel's DMA-elision behaviour).  This
+    is the interpret-normalized traffic model behind
+    ``gather_bytes_per_token`` in ``kv_stats``/benchmarks — a counted
+    quantity, not a measurement.
+    """
+    row_bytes = 2 * num_kv_heads * head_dim * dtype_bytes  # K and V
+    lens = [int(x) for x in live_lens]
+    if impl == "pallas_paged":
+        rows = sum(max(-(-live // block_size), 1) * block_size for live in lens)
+    else:
+        rows = len(lens) * table_width * block_size
+    return rows * row_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -64,7 +64,7 @@ from repro.configs.base import ModelConfig
 from repro.models.registry import build_model
 from repro.models.transformer import DecoderLM
 from repro.ops.registry import active_overrides
-from repro.serve.paged import SCRATCH_BLOCK, BlockPool
+from repro.serve.paged import SCRATCH_BLOCK, BlockPool, bucket_blocks
 from repro.serve.scheduler import Request, Slot, SlotScheduler
 
 PyTree = Any
@@ -230,6 +230,22 @@ class ContinuousBatchingEngine:
             "serve.queue_wait_s", "pending-queue wait per admission stint")
         self._g_queue = reg.gauge("serve.queue.depth")
         self._g_active = reg.gauge("serve.slots.active")
+        # Transfer / retrace accounting (DESIGN.md §11): counted bytes the
+        # tick moves across the host-device boundary, the counted KV bytes
+        # decode reads out of the page pool (traffic model, not a
+        # measurement), and the pooled jit-cache entry count.
+        self._m_h2d = reg.counter(
+            "serve.bytes.h2d", "host->device bytes per tick (token inputs, "
+            "dirty table rows, sampling uid/step vectors)")
+        self._m_d2h = reg.counter(
+            "serve.bytes.d2h", "device->host bytes per tick (the sampled "
+            "token vector; admission adds one token per prefill)")
+        self._m_gather = reg.counter(
+            "kv.gather.bytes", "counted K+V bytes decode reads from the KV "
+            "pool (ops.paged_gather_bytes traffic model)")
+        self._g_jit = reg.gauge(
+            "serve.jit.entries", "pooled jit-cache entries across the "
+            "engine's compiled callables")
         self.model = build_model(model_cfg)
         if not isinstance(self.model, DecoderLM):
             raise ValueError(
@@ -278,15 +294,24 @@ class ContinuousBatchingEngine:
                 (cb_cfg.num_slots, self._slot_blocks), SCRATCH_BLOCK, np.int32
             )
             self._rows = np.zeros(cb_cfg.num_slots, np.int64)  # KV rows written
-            self._decode_paged = jax.jit(
-                self.model.decode_step_paged,
-                donate_argnums=(1,),
-                static_argnames=("cache_t",),
+            # Device-resident mirror of the block tables (DESIGN.md §11):
+            # the tick reads this array directly instead of uploading the
+            # whole [S, W] host table every step.  Host-side allocator
+            # edits mark their slot dirty; the flush before decode pushes
+            # only the dirty rows through a donated row update, so steady
+            # decode (no allocation churn) uploads zero table bytes.
+            self._tables_dev = jnp.full(
+                (cb_cfg.num_slots, self._slot_blocks), SCRATCH_BLOCK, jnp.int32
             )
+            self._dirty_tables: set = set()
+            self._push_row = jax.jit(
+                lambda tab, i, row: tab.at[i].set(row), donate_argnums=(0,)
+            )
+            # slot index stays a *traced* argument (``.at[slot].set`` takes
+            # a dynamic index) so the admission write compiles per bucketed
+            # table width only — not per (slot, width) pair
             self._write_slot_paged = jax.jit(
-                self.model.write_slot_paged,
-                static_argnums=(2,),
-                donate_argnums=(0,),
+                self.model.write_slot_paged, donate_argnums=(0,)
             )
             self.preemptions = 0  # OOM evictions (requeued, not dropped)
             self.peak_used_blocks = 0
@@ -298,11 +323,10 @@ class ContinuousBatchingEngine:
             # place instead of copying the whole [L, S, T, H, D] pool
             # (self.pool is rebound to the result each call, so the old
             # buffer is never live)
-            self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
             self._write_slot = jax.jit(
-                self.model.write_slot, static_argnums=(2,), donate_argnums=(0,))
+                self.model.write_slot, donate_argnums=(0,))
         self._reset_slot = jax.jit(
-            self.model.reset_slot, static_argnums=(1,), donate_argnums=(0,))
+            self.model.reset_slot, donate_argnums=(0,))
         self._serve_cfg = cb_cfg.as_serve_config()
         # one stateful guard for the engine's lifetime: counters accumulate
         # across ticks and the trip latch persists (degraded part stays on
@@ -315,6 +339,60 @@ class ContinuousBatchingEngine:
         self._inputs = np.zeros((cb_cfg.num_slots, 1), np.int32)  # next token per slot
         self._frontend: Dict[int, Dict[str, jax.Array]] = {}
         self.ticks = 0  # decode ticks executed (for utilization accounting)
+        self._tick = self._build_tick()
+
+    def _build_tick(self):
+        """The fused device tick: decode the whole pool AND sample every
+        slot inside one jitted program, so a steady tick performs a single
+        D2H transfer — the ``[S]`` sampled-token vector (DESIGN.md §11).
+
+        Free slots sample garbage from garbage keys; the host discards
+        them (the scheduler owns occupancy).  The guarded sampling path
+        cannot fold in — the accuracy guard compares against the exact
+        oracle on the host — so the tick also returns the last-token
+        logits as a *device* array: the guard path fetches it, everyone
+        else never does.
+        """
+        cfg, serve_cfg = self.cfg, self._serve_cfg
+        model, cache_t = self.model, self._cache_t
+        base_key, paged = self._base_key, self.kv_layout == "paged"
+
+        def tick(params, pool, inputs, tables, uids, steps):
+            if paged:
+                logits, pool = model.decode_step_paged(
+                    params, pool, inputs, tables, cache_t=cache_t
+                )
+            else:
+                logits, pool = model.decode_step(params, pool, inputs)
+            last = logits[:, -1]  # [S, V]
+            if serve_cfg.temperature <= 0.0:
+                sampled = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            else:
+                keys = jax.vmap(
+                    lambda u, i: jax.random.fold_in(
+                        jax.random.fold_in(base_key, u), i
+                    )
+                )(uids, steps)
+                sampled = jax.vmap(
+                    lambda lg, k: sample_token(lg, k, cfg, serve_cfg)
+                )(last, keys)
+            return sampled, last, pool
+
+        return jax.jit(tick, donate_argnums=(1,))
+
+    def jit_cache_entries(self) -> int:
+        """Pooled compiled-variant count across the engine's jitted
+        callables — the retrace observable (tests/test_serve_retrace.py):
+        a repeated workload must not grow it, and mixed-length paged
+        traffic must grow the admission write O(log W), not O(n)."""
+        fns = [self._tick, self._reset_slot]
+        fns.append(
+            self._write_slot_paged if self.kv_layout == "paged"
+            else self._write_slot
+        )
+        if self.kv_layout == "paged":
+            fns.append(self._push_row)
+        return int(sum(f._cache_size() for f in fns))
 
     # -- submission ---------------------------------------------------------
 
@@ -411,6 +489,7 @@ class ContinuousBatchingEngine:
         if self.kv_layout == "paged":
             self.block_pool.release(req.uid)
             self._tables[slot.index, :] = SCRATCH_BLOCK
+            self._dirty_tables.add(slot.index)
         self.pool = self._reset_slot(self.pool, slot.index)
         self._m_finished.inc()
         if self.tracer.enabled:
@@ -432,6 +511,7 @@ class ContinuousBatchingEngine:
         if req.uid in self.block_pool.owners():
             self.block_pool.release(req.uid)
         self._tables[slot.index, :] = SCRATCH_BLOCK
+        self._dirty_tables.add(slot.index)
         self.pool = self._reset_slot(self.pool, slot.index)
         self.preemptions += 1
         req.enqueued_at = self._clock()  # queue-wait restarts for this stint
@@ -475,6 +555,7 @@ class ContinuousBatchingEngine:
         blocks = self.block_pool.allocate(req.uid, n)
         self._tables[slot.index, :] = SCRATCH_BLOCK
         self._tables[slot.index, :n] = blocks
+        self._dirty_tables.add(slot.index)
         self._note_peak()
         return True
 
@@ -497,6 +578,7 @@ class ContinuousBatchingEngine:
             self._preempt(victim)
         blk = self.block_pool.append(req.uid)
         self._tables[slot.index, rows // self.block_pool.block_size] = blk
+        self._dirty_tables.add(slot.index)
         self._note_peak()
         return True
 
@@ -529,6 +611,14 @@ class ContinuousBatchingEngine:
                 "peak_kv_bytes": self.peak_used_blocks * bs * row_bytes,
                 "preemptions": self.preemptions,
                 "peak_used_blocks": self.peak_used_blocks,
+                # counted decode traffic (ops.paged_gather_bytes): what
+                # the resolved paged backend reads from the page pool —
+                # gather adapters pay the full table window, pallas_paged
+                # pays live pages only (DESIGN.md §11)
+                "gather_bytes": self._m_gather.value(),
+                "gather_bytes_per_token": (
+                    self._m_gather.value() / max(self._m_tokens.value(), 1.0)
+                ),
             }
         rows = self.cb.num_slots * self._cache_t
         return {
@@ -576,14 +666,19 @@ class ContinuousBatchingEngine:
                     continue  # pool full even after preemption: wait in line
                 # prefill only as many rows as the table holds: the block
                 # grid, not max_len, sizes the single-request cache (rings
-                # keep the full window — they wrap in place).  This makes
-                # the jitted write_slot_paged retrace per (slot, block
-                # count) — bounded by num_slots * slot_blocks tiny scatter
-                # programs; prefill itself is eager and reshapes per
-                # prompt length on the dense path too
+                # keep the full window — they wrap in place).  The width is
+                # *bucketed* to the next power of two (serve.paged
+                # .bucket_blocks): extra table entries point at scratch and
+                # extra prefill rows are masked garbage, so the jitted
+                # write_slot_paged compiles O(log W) variants under
+                # mixed-length traffic instead of one per block count
+                # (DESIGN.md §11; the slot index itself is traced)
                 n_blocks = (
                     self._slot_blocks if self._ring
-                    else self.block_pool.blocks_for_tokens(rows)
+                    else bucket_blocks(
+                        self.block_pool.blocks_for_tokens(rows),
+                        self._slot_blocks,
+                    )
                 )
                 prefill_len = (
                     self.cb.max_len if self._ring
@@ -602,14 +697,17 @@ class ContinuousBatchingEngine:
                 logits, cache1 = self.model.prefill(
                     self.params, jnp.asarray(tokens)[None], prefill_len, **fe
                 )
+                self._m_h2d.inc(len(tokens) * 4)
                 if paged:
                     table = jnp.asarray(self._tables[slot.index, :n_blocks])
+                    self._m_h2d.inc(n_blocks * 4)
                     self.pool = self._write_slot_paged(
                         self.pool, cache1, slot.index, table
                     )
                     self._rows[slot.index] = rows
                 else:
                     self.pool = self._write_slot(self.pool, cache1, slot.index)
+            self._m_d2h.inc(4)  # the admission-sampled token below
             tok = int(sample_token(
                 logits[0, -1],
                 self._request_key(req, len(req.generated_prefix)),
@@ -638,56 +736,95 @@ class ContinuousBatchingEngine:
             if self.tracer.enabled:
                 self.tracer.begin("serve.decode", tick=self.ticks,
                                   uids=[s.request.uid for s in active])
+            s_count = self.cb.num_slots
             if paged:
-                logits, self.pool = self._decode_paged(
-                    self.params, self.pool, jnp.asarray(self._inputs),
-                    jnp.asarray(self._tables), cache_t=self._cache_t,
-                )
+                # flush dirty block-table rows: the only table bytes a
+                # tick uploads (steady decode uploads none)
+                for i in sorted(self._dirty_tables):
+                    self._tables_dev = self._push_row(
+                        self._tables_dev, jnp.int32(i),
+                        jnp.asarray(self._tables[i]),
+                    )
+                    self._m_h2d.inc(self._slot_blocks * 4)
+                self._dirty_tables.clear()
+                tables = self._tables_dev
+            else:
+                tables = None
+            if self._serve_cfg.temperature > 0.0:
+                # full-pool uid/step vectors: free slots derive garbage
+                # keys whose draws are discarded below
+                uv = np.zeros(s_count, np.int32)
+                sv = np.zeros(s_count, np.int32)
+                for s in active:
+                    uv[s.index] = s.request.uid
+                    sv[s.index] = (
+                        len(s.request.generated_prefix) + len(s.generated)
+                    )
+                uids, steps = jnp.asarray(uv), jnp.asarray(sv)
+                self._m_h2d.inc(2 * s_count * 4)
+            else:
+                uids = steps = None
+            # decode + sample fused in one program; ``last`` stays on
+            # device unless the guard path needs it
+            sampled_dev, last, self.pool = self._tick(
+                self.params, self.pool, jnp.asarray(self._inputs),
+                tables, uids, steps,
+            )
+            self._m_h2d.inc(self._inputs.size * 4)
+            if paged:
                 for slot in active:
                     self._rows[slot.index] += 1
-            else:
-                logits, self.pool = self._decode(
-                    self.params, self.pool, jnp.asarray(self._inputs)
-                )
-            last = logits[:, -1]  # [S, V]
-            # one batched sampling program + one host sync for all slots
-            if self._serve_cfg.temperature <= 0.0:
-                sampled = np.asarray(jnp.argmax(last, axis=-1))
-                toks = {s.index: int(sampled[s.index]) for s in active}
-            else:
+            spec = self.cfg.softmax_spec
+            if (
+                self.guard is not None
+                and self._serve_cfg.temperature > 0.0
+                and self._serve_cfg.star_sampling
+                and spec.kind != "exact"
+            ):
+                # guard needs concrete arrays: one batched eager softmax
+                # over all active rows (a single oracle check per tick),
+                # then the per-slot categorical draws — this path fetches
+                # the logits row block, trading the single-transfer tick
+                # for the host-side oracle comparison
                 rows_ix = jnp.asarray([s.index for s in active])
-                uids = jnp.asarray([s.request.uid for s in active])
-                steps = jnp.asarray([
-                    len(s.request.generated_prefix) + len(s.generated)
-                    for s in active
-                ])
                 keys = jax.vmap(lambda u, i: jax.random.fold_in(
-                    jax.random.fold_in(self._base_key, u), i))(uids, steps)
-                spec = self.cfg.softmax_spec
-                if (
-                    self.guard is not None
-                    and self._serve_cfg.star_sampling
-                    and spec.kind != "exact"
-                ):
-                    # guard needs concrete arrays: one batched eager
-                    # softmax over all active rows (a single oracle check
-                    # per tick), then the per-slot categorical draws
-                    scaled = (
-                        last[rows_ix].astype(jnp.float32)
-                        / self._serve_cfg.temperature
-                    )
-                    probs = ops.softmax(scaled, spec, guard=self.guard)
-                    logp = jnp.log(jnp.maximum(probs, 1e-20))
-                    sampled = np.asarray(jax.vmap(
-                        lambda k, lg: jax.random.categorical(k, lg, axis=-1)
-                    )(keys, logp)).astype(np.int32)
-                else:
-                    sampled = np.asarray(jax.vmap(
-                        lambda lg, k: sample_token(
-                            lg, k, self.cfg, self._serve_cfg
-                        )
-                    )(last[rows_ix], keys))
+                    jax.random.fold_in(self._base_key, u), i))(
+                        jnp.asarray([s.request.uid for s in active]),
+                        jnp.asarray([
+                            len(s.request.generated_prefix) + len(s.generated)
+                            for s in active
+                        ]))
+                scaled = (
+                    last[rows_ix].astype(jnp.float32)
+                    / self._serve_cfg.temperature
+                )
+                probs = ops.softmax(scaled, spec, guard=self.guard)
+                logp = jnp.log(jnp.maximum(probs, 1e-20))
+                sampled = np.asarray(jax.vmap(
+                    lambda k, lg: jax.random.categorical(k, lg, axis=-1)
+                )(keys, logp)).astype(np.int32)
+                self._m_d2h.inc(int(sampled.size) * 4 + len(active) * 4)
                 toks = {s.index: int(t) for s, t in zip(active, sampled)}
+            else:
+                # the tick's single D2H transfer: the sampled-token vector
+                sampled = np.asarray(sampled_dev)
+                self._m_d2h.inc(int(sampled.size) * 4)
+                toks = {s.index: int(sampled[s.index]) for s in active}
+            if paged:
+                impl = (
+                    active_overrides("paged_attention").get("impl")
+                    or self.cfg.paged_attention_spec.impl
+                )
+                pk = self.pool["layers"]["k"]
+                self._m_gather.inc(pk.shape[0] * ops.paged_gather_bytes(
+                    impl,
+                    table_width=self._slot_blocks,
+                    block_size=self.block_pool.block_size,
+                    live_lens=np.minimum(self._rows, self._cache_t),
+                    num_kv_heads=pk.shape[3],
+                    head_dim=pk.shape[4],
+                    dtype_bytes=pk.dtype.itemsize,
+                ))
             for slot in active:
                 tok = toks[slot.index]
                 finished = self.scheduler.record_token(slot, tok)
@@ -700,6 +837,7 @@ class ContinuousBatchingEngine:
             self.ticks += 1
         self._g_queue.set(len(self.scheduler.pending))
         self._g_active.set(len(self.scheduler.active_slots))
+        self._g_jit.set(self.jit_cache_entries())
         if self.tracer.enabled:
             self.tracer.counter(
                 "serve.sched",

@@ -49,6 +49,27 @@ from repro.obs.metrics import MetricsRegistry
 SCRATCH_BLOCK = 0  # reserved id: free-slot / padding writes land here
 
 
+def bucket_blocks(n: int, cap: int) -> int:
+    """Round a block count up to the next power of two, clamped to ``cap``.
+
+    Jit cache keys include operand shapes, so the engine's admission write
+    (``write_slot_paged``) would retrace per distinct (prefill length,
+    table width) pair — O(n) programs under mixed-length traffic.  Padding
+    the admission table to the bucketed width (extra entries point at the
+    scratch block, extra prefill rows are masked garbage) bounds the
+    variant count to O(log cap) without changing a single gathered row
+    (DESIGN.md §11 retrace-bucketing policy).
+    """
+    if n <= 0:
+        return min(1, cap)
+    if n >= cap:
+        return cap
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 class PoolExhausted(RuntimeError):
     """The free list cannot satisfy an allocation.
 
