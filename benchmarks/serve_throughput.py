@@ -33,6 +33,14 @@ Views, printed as ``name,value,derived`` CSV (benchmarks/run.py idiom):
    (``serve.ttft_s`` / ``serve.itl_s`` / ``serve.queue_wait_s``,
    DESIGN.md §10), printed for the continuous engines and embedded in
    the ``--json`` record under ``latency``.
+6. ``prefix_tokens_saved`` — a second, shared-prefix trace (every prompt
+   opens with the same 16 tokens) served by the paged engine with
+   ``prefix_cache`` + chunked prefill (DESIGN.md §12).  Reports the
+   fraction of prefill tokens skipped via the radix trie (asserted
+   ≥ 30%), token parity against the uncached paged run, and makespan
+   parity on the original *disjoint* trace (the cache must not slow
+   down traffic that cannot share).  Lands in ``--json`` under
+   ``prefix``.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--json out.json]
 """
@@ -103,14 +111,17 @@ def run_lockstep(cfg, params, trace, prompts, slots, max_len):
 
 
 def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
-                   kv_layout="dense", kv_block_size=16, kv_pool_blocks=None):
+                   kv_layout="dense", kv_block_size=16, kv_pool_blocks=None,
+                   prefix_cache=False, prefill_chunk_tokens=None):
     from repro.serve.engine import ContinuousBatchingEngine, ContinuousConfig
 
     eng = ContinuousBatchingEngine(
         cfg, params,
         ContinuousConfig(num_slots=slots, max_len=max_len,
                          kv_layout=kv_layout, kv_block_size=kv_block_size,
-                         kv_pool_blocks=kv_pool_blocks))
+                         kv_pool_blocks=kv_pool_blocks,
+                         prefix_cache=prefix_cache,
+                         prefill_chunk_tokens=prefill_chunk_tokens))
     useful = 0
     occupancy = []  # per-tick allocated blocks (paged) for the JSON record
     outputs = {}
@@ -149,6 +160,7 @@ def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
         # (DESIGN.md §11): the gather adapters pay the full table window,
         # pallas_paged pays live pages only
         out["gather_bytes_per_token"] = st["gather_bytes_per_token"]
+        out["prefix"] = st.get("prefix")
     return out
 
 
@@ -212,6 +224,52 @@ def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
           f"{cb['makespan'] / pg['makespan']:.2f}x,"
           f"token_parity={parity}")
 
+    # --- shared-prefix trace: radix-trie KV reuse + chunked prefill ---
+    # every prompt opens with the same 16 tokens, block size 4, chunk
+    # budget 8 tokens/tick (DESIGN.md §12).  The cached run must be
+    # token-identical to the uncached paged run and skip a substantial
+    # fraction of prefill work.
+    sp_rng = np.random.default_rng(1)
+    sp_trace = make_trace(n_requests, sp_rng)
+    shared = sp_rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    sp_prompts = [
+        np.concatenate([shared, sp_rng.integers(
+            0, cfg.vocab_size, (r["prompt_len"],)).astype(np.int32)])
+        for r in sp_trace]
+    sp_max_len = 16 + 24 + 16 + 8  # prefix + prompt + gen + headroom
+    sp_base = run_continuous(cfg, params, sp_trace, sp_prompts, slots,
+                             sp_max_len, kv_layout="paged", kv_block_size=4)
+    sp = run_continuous(cfg, params, sp_trace, sp_prompts, slots, sp_max_len,
+                        kv_layout="paged", kv_block_size=4,
+                        prefix_cache=True, prefill_chunk_tokens=8)
+    sp_parity = all(sp["outputs"][u] == sp_base["outputs"][u]
+                    for u in sp_base["outputs"])
+    assert sp_parity, "prefix-cached greedy output diverged from uncached paged"
+    total_prompt_tokens = sum(len(p) for p in sp_prompts)
+    saved = sp["prefix"]["tokens_saved"]
+    frac = saved / total_prompt_tokens
+    print(f"serve_prefix_tokens_saved,{saved},"
+          f"fraction={frac:.2f} hits={sp['prefix']['hits']} "
+          f"of {total_prompt_tokens} prompt tokens (shared-prefix trace, "
+          f"block=4 chunk=8) token_parity={sp_parity}")
+    assert frac >= 0.30, (
+        f"prefix cache saved only {frac:.0%} of prefill tokens (need >=30%)")
+
+    # disjoint trace: the cache must not cost anything when nothing is
+    # shared — same arrivals as the paged baseline, prefix cache on
+    dp = run_continuous(cfg, params, trace, prompts, slots, max_len,
+                        kv_layout="paged", kv_block_size=kv_block_size,
+                        prefix_cache=True)
+    dp_parity = all(dp["outputs"][u] == pg["outputs"][u]
+                    for u in pg["outputs"])
+    assert dp_parity, "prefix-cache engine diverged on the disjoint trace"
+    assert dp["makespan"] <= pg["makespan"], (
+        f"prefix cache regressed disjoint-trace makespan: "
+        f"{dp['makespan']} > {pg['makespan']}")
+    print(f"serve_prefix_disjoint_makespan_parity,"
+          f"{pg['makespan'] / dp['makespan']:.2f}x,"
+          f"token_parity={dp_parity} (no regression when nothing shares)")
+
     if json_path:
         record = {
             "bench": "serve_throughput",
@@ -222,8 +280,21 @@ def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
             "continuous": cb,
             "paged": pg,
             "paged_token_parity": parity,
+            "prefix": {
+                "tokens_saved": saved,
+                "hits": sp["prefix"]["hits"],
+                "evicted": sp["prefix"]["evicted"],
+                "saved_fraction": frac,
+                "total_prompt_tokens": total_prompt_tokens,
+                "shared_trace_token_parity": sp_parity,
+                "shared_trace_makespan": sp["makespan"],
+                "shared_trace_makespan_uncached": sp_base["makespan"],
+                "disjoint_token_parity": dp_parity,
+                "disjoint_makespan": dp["makespan"],
+                "disjoint_makespan_uncached": pg["makespan"],
+            },
         }
-        for eng_rec in (cb, pg):
+        for eng_rec in (cb, pg, sp, sp_base, dp):
             eng_rec.pop("outputs", None)  # token lists stay out of the record
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, default=float)

@@ -12,6 +12,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
       --engine continuous --attn-impl paged --kv-block-size 16
 
+  # shared-prefix KV cache + chunked prefill (DESIGN.md §12)
+  PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
+      --engine continuous --kv-layout paged --prefix-cache \\
+      --prefill-chunk-tokens 8
+
   # observability (DESIGN.md §10): Chrome trace + metrics snapshot
   PYTHONPATH=src python -m repro.launch.serve --arch granite_8b --smoke \\
       --engine continuous --trace-out trace.json --metrics-out metrics.json
@@ -105,7 +110,9 @@ def run_continuous(args, cfg, params) -> int:
                          temperature=args.temperature,
                          kv_layout=args.kv_layout,
                          kv_block_size=args.kv_block_size,
-                         kv_pool_blocks=args.kv_pool_blocks),
+                         kv_pool_blocks=args.kv_pool_blocks,
+                         prefix_cache=args.prefix_cache,
+                         prefill_chunk_tokens=args.prefill_chunk_tokens),
     )
     rng = np.random.default_rng(0)
     total = 0
@@ -131,6 +138,11 @@ def run_continuous(args, cfg, params) -> int:
         print(f"paged kv: peak {st['peak_used_blocks']}/{st['total_blocks']} "
               f"blocks ({st['peak_kv_bytes'] / 1e6:.2f} MB), "
               f"{st['preemptions']} preemptions")
+        if st.get("prefix") is not None:
+            p = st["prefix"]
+            print(f"prefix cache: {p['hits']} hits, "
+                  f"{p['tokens_saved']} prefill tokens saved, "
+                  f"{p['evicted']} evicted ({p['nodes']} trie nodes)")
     lat = eng.metrics.histogram("serve.ttft_s")
     if lat.count():
         print(f"ttft p50={1e3 * lat.percentile(50):.1f}ms "
@@ -174,6 +186,18 @@ def main() -> int:
         help="paged KV: usable blocks in the pool (default: dense-equivalent "
         "capacity slots * ceil(cache_len / block_size), where cache_len is "
         "max_len clamped to the arch's sliding window)",
+    )
+    ap.add_argument(
+        "--prefix-cache", action="store_true",
+        help="continuous+paged: share KV blocks across requests with a "
+        "common prompt prefix (radix trie over token-id block chunks; "
+        "admission skips prefill for the cached prefix — DESIGN.md §12)",
+    )
+    ap.add_argument(
+        "--prefill-chunk-tokens", type=int, default=None,
+        help="continuous: budget of prompt tokens prefilled per tick; "
+        "prompts stream through in power-of-two chunks interleaved with "
+        "decode instead of head-of-line-blocking the pool",
     )
     ap.add_argument(
         "--softmax-impl", default=None, metavar="IMPL",

@@ -426,12 +426,41 @@ def spec_moe(cfg: ModelConfig) -> Params:
     }
 
 
-def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    """Per-expert queue capacity for a ``tokens_per_group``-token call.
+
+    Factored out because capacity is *shape-dependent*: chunked prefill must
+    pass the capacity of the **full** sequence into every chunk (plus the
+    carried queue counts, see ``moe(state=...)``) or token-dropping decisions
+    — and therefore the outputs — would differ from a monolithic prefill.
+    """
+    return max(1, int(cfg.capacity_factor * cfg.top_k * tokens_per_group / cfg.num_experts))
+
+
+def moe(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[jax.Array] = None,
+    capacity: Optional[int] = None,
+):
     """Grouped one-hot dispatch MoE (GShard-style, capacity-dropped).
 
     The router softmax runs through the STAR engine when cfg.star_router —
     the paper's point (softmax precision-insensitivity) applies to routing
     distributions at least as well as to attention.
+
+    ``state`` / ``capacity`` make the capacity-dropping decision
+    *chunk-invariant* for chunked prefill: ``state`` ([groups, experts]
+    int32) carries per-expert assignment counts from earlier chunks of the
+    same sequence (so queue positions are global, not per-call), and
+    ``capacity`` overrides the per-call queue bound with the full-sequence
+    one.  When either is given the call returns ``(y, new_state)``; the
+    bare-``y`` legacy form (both None) is bit-identical to the historical
+    behavior.  Every (token, choice) occupies its *global* queue position,
+    so chunk-wise outputs match the monolithic pass exactly: the expert FFN
+    is row-independent and the combine weights select identical rows.
     """
     dt = cdtype(cfg)
     b, t, d = x.shape
@@ -440,6 +469,7 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     groups = b  # one group per batch row keeps dispatch O(T^2/G) local
     tg = tokens // groups
     xg = x.reshape(groups, tg, d)
+    stateful = state is not None or capacity is not None
 
     logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dt)).astype(jnp.float32)
     spec = cfg.softmax_spec
@@ -454,11 +484,15 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [g, t, k]
     gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
 
-    cap = max(1, int(cfg.capacity_factor * k * tg / e))
+    cap = capacity if capacity is not None else moe_capacity(cfg, tg)
     # position of each (token, choice) within its expert queue
     onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [g, t, k, e]
     flat = onehot.reshape(groups, tg * k, e)
     pos = (jnp.cumsum(flat, axis=1) - flat).reshape(groups, tg, k, e)
+    if state is not None:
+        # offset intra-call positions by the prior chunks' per-expert
+        # counts so position == global queue position for this sequence
+        pos = pos + state.astype(jnp.float32)[:, None, None, :]
     pos = jnp.sum(pos * onehot, axis=-1)  # [g, t, k]
     keep = pos < cap
     gate_vals = gate_vals * keep
@@ -477,7 +511,13 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     out = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(dt))
     out = wlc(out, ("expert", "batch", None, "embed"))
     y = jnp.einsum("gtec,egcd->gtd", combine.astype(dt), out)
-    return wlc(y.reshape(b, t, d), ("batch", "seq", "embed"))
+    y = wlc(y.reshape(b, t, d), ("batch", "seq", "embed"))
+    if not stateful:
+        return y
+    # counts include dropped choices — the monolithic cumsum does too
+    counts = jnp.sum(onehot, axis=(1, 2)).astype(jnp.int32)  # [g, e]
+    new_state = counts if state is None else state + counts
+    return y, new_state
 
 
 def scan_blocks(body, carry, xs, use_scan: bool = True):

@@ -80,7 +80,8 @@ class DecoderLM:
         cache: Optional[Params],
         kv_valid_len: Optional[jax.Array],
         paged_cache_t: Optional[int] = None,
-    ) -> Tuple[jax.Array, Optional[Params], Tuple[jax.Array, jax.Array]]:
+        moe_capacity: Optional[int] = None,
+    ) -> Tuple[jax.Array, Optional[Params], Tuple[jax.Array, jax.Array], Optional[jax.Array]]:
         cfg = self.cfg
         a, new_cache, kv = L.attention_block(
             bp["attn"], L.rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg,
@@ -90,11 +91,19 @@ class DecoderLM:
         )
         h = h + L.attention_out(bp["attn"], a, cfg)
         hn = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+        moe_state = None
         if cfg.family == "moe":
-            h = h + L.moe(bp["moe"], hn, cfg)
+            prior = cache.get("moe") if cache is not None else None
+            if prior is not None or moe_capacity is not None:
+                # chunked prefill: global expert-queue positions + the
+                # full-sequence capacity keep dropping chunk-invariant
+                y, moe_state = L.moe(bp["moe"], hn, cfg, state=prior, capacity=moe_capacity)
+                h = h + y
+            else:
+                h = h + L.moe(bp["moe"], hn, cfg)
         else:
             h = h + L.mlp(bp["mlp"], hn, cfg)
-        return h, new_cache, kv
+        return h, new_cache, kv, moe_state
 
     def _run_blocks(
         self,
@@ -110,7 +119,7 @@ class DecoderLM:
         def body(carry, xs):
             bp = xs["p"]
             cache = xs.get("c")
-            out, new_cache, _ = self._block(
+            out, new_cache, _, _ = self._block(
                 bp, carry, positions=positions, cache=cache,
                 kv_valid_len=kv_valid_len,
             )
@@ -389,7 +398,7 @@ class DecoderLM:
             pos = jnp.stack([pos, pos, pos], axis=-1)
 
         def body(carry, xs):
-            out, new_c, _ = self._block(
+            out, new_c, _, _ = self._block(
                 xs["p"], carry, positions=pos,
                 cache={**xs["c"], "len": cache["len"], "tables": block_tables},
                 kv_valid_len=None, paged_cache_t=cache_t,
@@ -415,17 +424,33 @@ class DecoderLM:
         max_len: int,
         *,
         patch_embeds: Optional[jax.Array] = None,
+        cache_t: Optional[int] = None,
+        moe_capacity: Optional[int] = None,
     ) -> Tuple[jax.Array, Params]:
-        """Process a prompt, return (last-position logits, primed cache)."""
+        """Process a prompt, return (last-position logits, primed cache).
+
+        ``cache_t`` overrides the cache capacity (default
+        ``cache_len(max_len)``) — chunked prefill stages into a *linear*
+        buffer sized past the sliding window so later chunks can append
+        (``prefill_extend``) before ``finalize_ring_cache`` folds it.
+        ``moe_capacity`` threads the full-sequence expert capacity through
+        (and adds per-layer ``moe`` queue counts to the returned cache) so
+        a chunked MoE prefill drops exactly the tokens a monolithic one
+        would.
+        """
         cfg = self.cfg
         b, t = tokens.shape
         x, positions, n_prefix = self._embed_inputs(params, tokens, patch_embeds)
 
         def body(carry, bp):
-            out, _, (k, v) = self._block(
-                bp, carry, positions=positions, cache=None, kv_valid_len=None
+            out, _, (k, v), ms = self._block(
+                bp, carry, positions=positions, cache=None, kv_valid_len=None,
+                moe_capacity=moe_capacity,
             )
-            return out, {"k": k, "v": v}
+            ys = {"k": k, "v": v}
+            if ms is not None:
+                ys["moe"] = ms
+            return out, ys
 
         if cfg.remat:
             body = jax.checkpoint(body)
@@ -433,24 +458,140 @@ class DecoderLM:
         h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
         logits = L.unembed(params["unembed"], h[:, -1:], cfg, params["embed"])
 
-        cache_t = self.cache_len(max_len)
+        ct = cache_t if cache_t is not None else self.cache_len(max_len)
         seq = x.shape[1]
-        if cfg.sliding_window is None and seq > cache_t:
+        if cfg.sliding_window is None and seq > ct:
             raise ValueError(
                 f"prefill length {seq} (incl. any patch prefix) exceeds cache "
-                f"capacity {cache_t}; pass a larger max_len"
+                f"capacity {ct}; pass a larger max_len"
             )
-        k_init, v_init = L.fit_window_cache(kvs["k"], kvs["v"], 2, cache_t, seq)
+        k_init, v_init = L.fit_window_cache(kvs["k"], kvs["v"], 2, ct, seq)
         if positions is not None:  # VLM: next M-RoPE temporal position
             next_pos = positions[0, -1, 0].astype(jnp.int32) + 1
         else:
             next_pos = jnp.asarray(seq, jnp.int32)
+        layer_caches = {"k": k_init, "v": v_init}
+        if "moe" in kvs:
+            layer_caches["moe"] = kvs["moe"]
         cache = {
-            "layers": {"k": k_init, "v": v_init},
+            "layers": layer_caches,
             "len": jnp.asarray(seq, jnp.int32),
             "pos": next_pos,
         }
         return logits, cache
+
+    def prefill_extend(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jax.Array,
+        *,
+        moe_capacity: Optional[int] = None,
+    ) -> Tuple[jax.Array, Params]:
+        """Append a prompt chunk to a *linear* staging cache.
+
+        tokens [1, c] land at rows ``[len, len+c)`` of the staging buffer
+        (the attention append path: queries at offset ``len``, causal +
+        sliding-window masking against every cached row), so running a
+        prompt through ``prefill`` + ``prefill_extend`` chunks produces the
+        same KV rows and final logits as one monolithic ``prefill`` — the
+        bit-identity contract chunked serving relies on (DESIGN.md §12).
+        Requires the staging buffer to be strictly longer than the sliding
+        window (the ring in-place path only supports single-token writes).
+        """
+        cfg = self.cfg
+        b, c = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg)
+        pos0 = cache.get("pos", cache["len"]).astype(jnp.int32)
+        pos = pos0 + jnp.arange(c, dtype=jnp.int32)[None]
+        pos = jnp.broadcast_to(pos, (b, c))
+        if cfg.mrope_sections:
+            pos = jnp.stack([pos, pos, pos], axis=-1)
+
+        def body(carry, xs):
+            out, new_c, _, ms = self._block(
+                xs["p"], carry, positions=pos,
+                cache={**xs["c"], "len": cache["len"]},
+                kv_valid_len=None, moe_capacity=moe_capacity,
+            )
+            ys = {"k": new_c["k"], "v": new_c["v"]}
+            if ms is not None:
+                ys["moe"] = ms
+            return out, ys
+
+        h, new_layers = L.scan_blocks(
+            body, x, {"p": params["blocks"], "c": cache["layers"]}
+        )
+        # rmsnorm is positionwise, so norming the last row alone matches
+        # the monolithic norm-then-slice bit for bit
+        h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+        logits = L.unembed(params["unembed"], h, cfg, params["embed"])
+        new_cache = {
+            "layers": new_layers,
+            "len": cache["len"] + c,
+            "pos": cache.get("pos", cache["len"]) + c,
+        }
+        return logits, new_cache
+
+    def gather_prefix_cache(
+        self, pool: Params, blocks, rows: int, capacity: int
+    ) -> Params:
+        """Batch-1 linear staging cache seeded from cached prefix ``blocks``.
+
+        The prefix-cache admission path: the trie matched ``rows`` prompt
+        rows living in ``blocks`` (all full, ``rows == len(blocks) *
+        block_size``), and the uncached suffix continues from there via
+        ``prefill_extend``.  Rows past ``rows`` are zero until written —
+        masked garbage, exactly like a monolithic prefill's padding.
+        """
+        pk, pv = pool["layers"]["k"], pool["layers"]["v"]
+        bs = pk.shape[2]
+        if rows != len(blocks) * bs:
+            raise ValueError(f"prefix rows {rows} != {len(blocks)} blocks x {bs}")
+        tab = jnp.asarray(list(blocks), jnp.int32)
+
+        def gather(a):  # [L, N, bs, H, D] -> [L, 1, capacity, H, D]
+            g = a[:, tab]
+            lyr, w, _, hh, dd = g.shape
+            g = g.reshape(lyr, 1, w * bs, hh, dd)
+            return jnp.pad(g, [(0, 0), (0, 0), (0, capacity - w * bs), (0, 0), (0, 0)])
+
+        rows32 = jnp.asarray(rows, jnp.int32)
+        return {
+            "layers": {"k": gather(pk), "v": gather(pv)},
+            "len": rows32,
+            "pos": rows32,
+        }
+
+    def finalize_ring_cache(self, cache: Params, wlen: int) -> Params:
+        """Fold a linear staging cache into the ring layout (slot = pos % wlen).
+
+        The traced-length counterpart of ``layers.fit_window_cache``: ring
+        slot ``s`` receives the *latest* staged token congruent to ``s``
+        (``j = s + floor((T-1-s)/wlen) * wlen``), with a traced ``T`` so
+        chunk-count differences don't retrace.  Slots ``s >= T`` clip to
+        row 0 — masked garbage, decode only trusts ``min(len, wlen)`` rows.
+        """
+        k = cache["layers"]["k"]
+        T = cache["len"].astype(jnp.int32)
+        s = jnp.arange(wlen, dtype=jnp.int32)
+        j = jnp.clip(s + ((T - 1 - s) // wlen) * wlen, 0, k.shape[2] - 1)
+
+        def take(a):
+            return jnp.take(a, j, axis=2)
+
+        return {
+            "layers": {"k": take(k), "v": take(cache["layers"]["v"])},
+            "len": cache["len"],
+            "pos": cache["pos"],
+        }
+
+    def moe_prefill_capacity(self, rows: int) -> Optional[int]:
+        """Full-sequence expert capacity for a ``rows``-row prompt (None
+        for non-MoE archs) — what every chunk of that prompt must use."""
+        if self.cfg.family != "moe":
+            return None
+        return L.moe_capacity(self.cfg, rows)
 
     def decode_step(
         self, params: Params, cache: Params, tokens: jax.Array
@@ -470,7 +611,7 @@ class DecoderLM:
             pos = jnp.stack([pos, pos, pos], axis=-1)
 
         def body(carry, xs):
-            out, new_c, _ = self._block(
+            out, new_c, _, _ = self._block(
                 xs["p"], carry, positions=pos, cache={**xs["c"], "len": cache["len"]},
                 kv_valid_len=None,
             )

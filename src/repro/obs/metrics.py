@@ -188,7 +188,13 @@ class Histogram:
             raise ValueError(f"percentile must be in [0, 100], got {p}")
         s = self._series.get(_lkey(labels))
         if s is None or s.count == 0:
+            # zero-count edge: never leak the ±inf min/max sentinels
             return None
+        if s.count == 1 or s.min == s.max:
+            # one observation (or a constant series) has an exact answer;
+            # skipping interpolation keeps ±inf out of the arithmetic even
+            # when the single sample sits in the overflow bucket
+            return s.min
         rank = p / 100.0 * s.count
         cum = 0
         for i, n in enumerate(s.counts):
@@ -211,6 +217,9 @@ class Histogram:
                 "labels": kw,
                 "count": s.count,
                 "sum": s.sum,
+                # both bounds need the zero-count guard: an empty series
+                # holds the +inf/-inf init sentinels, which are not JSON
+                # and must never escape a snapshot
                 "min": s.min if s.count else None,
                 "max": s.max if s.count else None,
                 "p50": self.percentile(50, **kw),

@@ -64,7 +64,7 @@ from repro.configs.base import ModelConfig
 from repro.models.registry import build_model
 from repro.models.transformer import DecoderLM
 from repro.ops.registry import active_overrides
-from repro.serve.paged import SCRATCH_BLOCK, BlockPool, bucket_blocks
+from repro.serve.paged import SCRATCH_BLOCK, BlockPool, PrefixCache, bucket_blocks
 from repro.serve.scheduler import Request, Slot, SlotScheduler
 
 PyTree = Any
@@ -161,6 +161,17 @@ class ContinuousConfig:
     # usable blocks in the pool (scratch excluded); None sizes it to the
     # dense-equivalent capacity num_slots * ceil(cache_len / block_size)
     kv_pool_blocks: Optional[int] = None
+    # Shared-prefix KV cache (DESIGN.md §12): a radix trie over token-id
+    # block chunks maps a new request's longest cached prefix to existing
+    # pool blocks (refcount++), so admission skips prefill for the shared
+    # prefix.  Paged layout only; rings and MoE archs silently opt out
+    # (their KV/expert state is not prefix-local — see PrefixCache docs).
+    prefix_cache: bool = False
+    # Chunked prefill: budget of prompt tokens processed per engine tick.
+    # Admitted prompts stream through in power-of-two chunks interleaved
+    # with decode ticks instead of head-of-line-blocking the pool; None
+    # keeps the monolithic admission prefill.
+    prefill_chunk_tokens: Optional[int] = None
     # Accuracy guard on the sampling softmax (DESIGN.md §9): sampled
     # comparison against the exact oracle, fallback to a clean backend
     # when a degraded (faulty / over-quantized) spec exceeds tolerance.
@@ -327,6 +338,32 @@ class ContinuousBatchingEngine:
                 self.model.write_slot, donate_argnums=(0,))
         self._reset_slot = jax.jit(
             self.model.reset_slot, donate_argnums=(0,))
+        # Shared-prefix cache + chunked prefill (DESIGN.md §12).  Either
+        # flag routes admission through the staging path; with both off the
+        # monolithic admission prefill below is untouched.
+        if cb_cfg.prefill_chunk_tokens is not None and cb_cfg.prefill_chunk_tokens < 1:
+            raise ValueError(
+                f"prefill_chunk_tokens must be >= 1, got {cb_cfg.prefill_chunk_tokens}"
+            )
+        if cb_cfg.prefix_cache and layout != "paged":
+            raise ValueError(
+                "prefix_cache requires kv_layout='paged' (the dense pool has "
+                "no shareable blocks); pass kv_layout='paged' or drop the flag"
+            )
+        self._chunked = cb_cfg.prefill_chunk_tokens is not None or cb_cfg.prefix_cache
+        self.prefix: Optional[PrefixCache] = None
+        if (
+            cb_cfg.prefix_cache
+            and not self._ring
+            and model_cfg.family != "moe"
+        ):
+            # rings opt out (a wrapped window no longer holds the prefix
+            # rows a later request would adopt) and so do MoE archs (expert
+            # queue positions are sequence-global, so cached prefix KV is
+            # not sufficient state to resume from) — both still get chunked
+            # prefill, just no cross-request sharing
+            self.prefix = PrefixCache(self.block_pool, metrics=self.metrics)
+        self._staging: Dict[int, Dict[str, Any]] = {}
         self._serve_cfg = cb_cfg.as_serve_config()
         # one stateful guard for the engine's lifetime: counters accumulate
         # across ticks and the trip latch persists (degraded part stays on
@@ -505,16 +542,25 @@ class ContinuousBatchingEngine:
         generated tokens fold into the request, so on re-admission it
         re-prefills ``prompt + generated_prefix`` and resumes mid-stream
         — greedy output and per-request PRNG streams are unaffected."""
+        self._staging.pop(slot.index, None)  # drop any in-flight chunk state
         req = self.scheduler.preempt(slot)  # keeps FIFO priority
         # a victim bound this very tick but not yet prefilled owns no
-        # blocks yet — nothing to release
+        # blocks yet — nothing to release (staging slots may own adopted
+        # prefix blocks, which this returns/unshares)
         if req.uid in self.block_pool.owners():
             self.block_pool.release(req.uid)
         self._tables[slot.index, :] = SCRATCH_BLOCK
         self._dirty_tables.add(slot.index)
         self.pool = self._reset_slot(self.pool, slot.index)
         self.preemptions += 1
-        req.enqueued_at = self._clock()  # queue-wait restarts for this stint
+        # queue-wait restarts for this stint — but only if the previous
+        # stint was already observed at admission (enqueued_at consumed).
+        # A victim preempted before its admission observe ran (bound this
+        # very tick, then evicted by an earlier admission) still carries
+        # its original stamp: restamping would silently drop that whole
+        # wait stint from serve.queue_wait_s.
+        if req.enqueued_at is None:
+            req.enqueued_at = self._clock()
         self._m_preempted.inc()
         self.tracer.instant(
             "serve.preempt", uid=req.uid,
@@ -522,13 +568,27 @@ class ContinuousBatchingEngine:
         )
 
     def _lowest_priority_victim(self, min_uid: int) -> Optional[Slot]:
-        """The active slot with the largest uid above ``min_uid`` —
+        """The occupied slot with the largest uid above ``min_uid`` —
         latest-admitted work is evicted first (FIFO priority: earlier
-        requests never yield to later ones)."""
+        requests never yield to later ones).  Prefilling slots are fair
+        game: staged chunk work is cheaper to redo than decoded tokens."""
         victims = [
-            s for s in self.scheduler.active_slots if s.request.uid > min_uid
+            s for s in self.scheduler.occupied_slots if s.request.uid > min_uid
         ]
         return max(victims, key=lambda s: s.request.uid) if victims else None
+
+    def _reclaim_blocks(self, n: int, min_uid: int) -> bool:
+        """Make ``n`` blocks allocatable: evict cold prefix-trie leaves
+        first (cached KV is cheaper to lose than live work), then preempt
+        later-admitted slots.  False when neither can free enough."""
+        while not self.block_pool.can_allocate(n):
+            if self.prefix is not None and self.prefix.evict_one():
+                continue
+            victim = self._lowest_priority_victim(min_uid)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
 
     def _note_peak(self) -> None:
         """Record the allocator high-water mark at allocation time, so
@@ -546,12 +606,9 @@ class ContinuousBatchingEngine:
             self._slot_blocks if self._ring
             else self.block_pool.blocks_for_tokens(rows)
         )
-        while not self.block_pool.can_allocate(n):
-            victim = self._lowest_priority_victim(req.uid)
-            if victim is None:
-                self.scheduler.pending.appendleft(slot.release())
-                return False
-            self._preempt(victim)
+        if not self._reclaim_blocks(n, req.uid):
+            self.scheduler.pending.appendleft(slot.release())
+            return False
         blocks = self.block_pool.allocate(req.uid, n)
         self._tables[slot.index, :] = SCRATCH_BLOCK
         self._tables[slot.index, :n] = blocks
@@ -571,6 +628,8 @@ class ContinuousBatchingEngine:
             return True  # current block still has room
         req = slot.request
         while not self.block_pool.can_allocate(1):
+            if self.prefix is not None and self.prefix.evict_one():
+                continue
             victim = self._lowest_priority_victim(-1)
             if victim is None or victim is slot:
                 self._preempt(slot)
@@ -581,6 +640,216 @@ class ContinuousBatchingEngine:
         self._dirty_tables.add(slot.index)
         self._note_peak()
         return True
+
+    # -- chunked prefill + prefix cache (DESIGN.md §12) ------------------------
+
+    def _staging_rows(self, rows: int) -> int:
+        """Linear staging-cache capacity for a ``rows``-row prompt.
+
+        Rings stage past the window (power of two >= max(rows, window+1))
+        so chunks append linearly before ``finalize_ring_cache`` folds the
+        buffer; non-ring paged staging matches the bucketed admission block
+        grid exactly (same jit variants as the monolithic write); dense
+        non-ring staging is the pool row itself."""
+        if self._ring:
+            need = max(rows, self.cfg.sliding_window + 1)
+            ts = 1
+            while ts < need:
+                ts *= 2
+            return ts
+        if self.kv_layout == "paged":
+            nb = bucket_blocks(
+                self.block_pool.blocks_for_tokens(rows), self._slot_blocks
+            )
+            return nb * self.block_pool.block_size
+        return self._cache_t
+
+    def _admit_staging(self, slot: Slot) -> None:
+        """Bind an admitted request to the chunked-prefill path: adopt any
+        trie-cached prefix blocks (skipping their prefill outright), size
+        the linear staging cache, and queue the uncached suffix for
+        budgeted chunk processing (``_run_prefill_chunks``)."""
+        req = slot.request
+        fe = self._frontend.get(req.uid, {})
+        tokens = np.concatenate(
+            [req.prompt, np.asarray(req.generated_prefix, np.int32)]
+        ) if req.generated_prefix else np.asarray(req.prompt, np.int32)
+        rows = self._prefix_rows(fe) + len(tokens)
+        p0, shared = 0, []
+        if self.prefix is not None and not fe:
+            # frontend prefixes (VLM patches) shift rows past the token
+            # grid, so such requests never share — token-only lookups
+            shared, p0 = self.prefix.lookup(tokens)
+            if shared:
+                self.block_pool.adopt(req.uid, shared)
+        self._staging[slot.index] = {
+            "req": req,
+            "fe": fe,
+            "tokens": tokens,
+            "rows": rows,
+            "p0": p0,
+            "shared": list(shared),
+            "suffix": tokens[p0:],
+            "done": 0,
+            "cache": None,
+            "logits": None,
+            "Ts": self._staging_rows(rows),
+            "moe_cap": self.model.moe_prefill_capacity(rows),
+        }
+        slot.prefilling = True
+        now = self._clock()
+        if req.enqueued_at is not None:
+            self._h_queue.observe(now - req.enqueued_at)
+            req.enqueued_at = None  # consumed: a later preempt restamps
+        self._m_admitted.inc()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "serve.admit", uid=req.uid, slot=slot.index, rows=rows,
+                prefix_rows=p0,
+            )
+
+    def _run_prefill_chunks(self) -> List[TokenEvent]:
+        """Feed the tick's prompt-token budget through staging slots (FIFO
+        by uid, power-of-two chunks); write completed prefills into the
+        pool and sample their first token."""
+        events: List[TokenEvent] = []
+        budget = self.cb.prefill_chunk_tokens or (1 << 30)
+        for idx in sorted(self._staging, key=lambda i: self._staging[i]["req"].uid):
+            if budget <= 0:
+                break
+            st = self._staging.get(idx)
+            if st is None:
+                continue  # preempted by an earlier completion this tick
+            req, suffix = st["req"], st["suffix"]
+            while budget > 0 and st["done"] < len(suffix):
+                c = min(len(suffix) - st["done"], budget)
+                c = 1 << (int(c).bit_length() - 1)  # pow2: bounded variants
+                chunk = suffix[st["done"]:st["done"] + c]
+                with self.tracer.span(
+                    "serve.prefill_chunk", uid=req.uid, tokens=int(c),
+                    done=st["done"] + int(c), total=len(suffix),
+                ):
+                    if st["cache"] is None and st["p0"]:
+                        # seed the staging buffer with the cached prefix
+                        # rows straight out of the page pool — this is the
+                        # prefill work the trie hit saves
+                        st["cache"] = self.model.gather_prefix_cache(
+                            self.pool, st["shared"], st["p0"], st["Ts"]
+                        )
+                    if st["cache"] is None:
+                        st["logits"], st["cache"] = self.model.prefill(
+                            self.params, jnp.asarray(chunk)[None],
+                            self.cb.max_len, cache_t=st["Ts"],
+                            moe_capacity=st["moe_cap"], **st["fe"]
+                        )
+                    else:
+                        st["logits"], st["cache"] = self.model.prefill_extend(
+                            self.params, st["cache"], jnp.asarray(chunk)[None],
+                            moe_capacity=st["moe_cap"],
+                        )
+                self._m_h2d.inc(int(c) * 4)
+                st["done"] += int(c)
+                budget -= int(c)
+            if st["done"] == len(suffix):
+                ev = self._finish_prefill(idx)
+                if ev is not None:
+                    events.append(ev)
+        return events
+
+    def _strip_staging_cache(self, cache: PyTree) -> PyTree:
+        """Drop chunk-only staging state (MoE queue counts) before the
+        pool write — decode is stateless, exactly like the monolithic
+        path."""
+        return {
+            "layers": {
+                "k": cache["layers"]["k"], "v": cache["layers"]["v"],
+            },
+            "len": cache["len"],
+            "pos": cache["pos"],
+        }
+
+    def _finish_prefill(self, idx: int) -> Optional[TokenEvent]:
+        """Write a completed staging prefill into the pool, index its full
+        blocks in the prefix trie, and sample the request's first token.
+        Returns None when the pool could not fit the fresh blocks even
+        after eviction/preemption (the request requeues, like the
+        monolithic ``_admit_blocks`` failure path)."""
+        st = self._staging.pop(idx)
+        slot = self.scheduler.slots[idx]
+        req, rows = st["req"], st["rows"]
+        cache = st["cache"]
+        if self.kv_layout == "paged":
+            bp = self.block_pool
+            if self._ring:
+                n_real = n_fresh = self._slot_blocks  # rings never adopt
+            else:
+                n_real = bp.blocks_for_tokens(rows)
+                n_fresh = n_real - len(st["shared"])
+            if not self._reclaim_blocks(n_fresh, req.uid):
+                self._requeue_staging(slot, st)
+                return None
+            if req.uid in bp.owners():  # adopted a prefix at admission
+                fresh = [bp.append(req.uid) for _ in range(n_fresh)]
+            else:
+                fresh = bp.allocate(req.uid, n_fresh)
+            table_row = st["shared"] + fresh
+            self._tables[idx, :] = SCRATCH_BLOCK
+            self._tables[idx, :n_real] = table_row
+            self._dirty_tables.add(idx)
+            self._note_peak()
+            if self._ring:
+                cache = self.model.finalize_ring_cache(cache, self._cache_t)
+                write_table = table_row
+            else:
+                # the adopted prefix rows already live in the pool: scatter
+                # them to scratch so the write cannot disturb shared blocks
+                # (CoW discipline), and pad to the bucketed grid
+                width = st["Ts"] // bp.block_size
+                write_table = (
+                    [SCRATCH_BLOCK] * len(st["shared"]) + fresh
+                    + [SCRATCH_BLOCK] * (width - n_real)
+                )
+            if "moe" in cache["layers"]:
+                cache = self._strip_staging_cache(cache)
+            self.pool = self._write_slot_paged(
+                self.pool, cache, idx, jnp.asarray(write_table, jnp.int32)
+            )
+            self._m_h2d.inc(len(write_table) * 4)
+            self._rows[idx] = rows
+            if self.prefix is not None and not st["fe"]:
+                self.prefix.insert(st["tokens"], table_row)
+        else:
+            if self._ring:
+                cache = self.model.finalize_ring_cache(cache, self._cache_t)
+            elif "moe" in cache["layers"]:
+                cache = self._strip_staging_cache(cache)
+            self.pool = self._write_slot(self.pool, cache, idx)
+        slot.prefilling = False
+        self._m_d2h.inc(4)  # the admission-sampled token below
+        tok = int(sample_token(
+            st["logits"][0, -1],
+            self._request_key(req, len(req.generated_prefix)),
+            self.cfg, self._serve_cfg, guard=self.guard,
+        ))
+        finished = self.scheduler.record_token(slot, tok)
+        ev = self._emit(slot, tok, finished)
+        self._inputs[idx, 0] = tok
+        if finished:
+            self._finish(slot)
+        return ev
+
+    def _requeue_staging(self, slot: Slot, st: Dict[str, Any]) -> None:
+        """Completion found no room even after eviction/preemption: drop
+        the staged work and wait in line (the chunked counterpart of the
+        monolithic ``_admit_blocks`` False path)."""
+        req = st["req"]
+        if req.uid in self.block_pool.owners():
+            self.block_pool.release(req.uid)  # return adopted prefix blocks
+        req.enqueued_at = self._clock()  # admission observed; new stint
+        self.scheduler.pending.appendleft(slot.release())
+        self._tables[slot.index, :] = SCRATCH_BLOCK
+        self._dirty_tables.add(slot.index)
+        self.pool = self._reset_slot(self.pool, slot.index)
 
     def kv_row_bytes(self) -> int:
         """Bytes one KV token row costs across all layers (K + V)."""
@@ -599,7 +868,17 @@ class ContinuousBatchingEngine:
         row_bytes = self.kv_row_bytes()
         if self.kv_layout == "paged":
             bs = self.block_pool.block_size
+            prefix_stats = None
+            if self.cb.prefix_cache:
+                p = self.prefix
+                prefix_stats = {
+                    "hits": p.hits if p else 0,
+                    "tokens_saved": p.tokens_saved if p else 0,
+                    "evicted": p.evicted if p else 0,
+                    "nodes": len(p) if p else 0,
+                }
             return {
+                "prefix": prefix_stats,
                 "layout": "paged",
                 "used_blocks": self.block_pool.used_blocks,
                 "free_blocks": self.block_pool.free_blocks,
@@ -655,6 +934,11 @@ class ContinuousBatchingEngine:
         for slot in self.scheduler.admit():
             if slot.free:
                 continue  # preempted by an earlier admission this tick
+            if self._chunked:
+                # staging path: prefix-cache lookup + budgeted chunk
+                # prefill over the next ticks (DESIGN.md §12)
+                self._admit_staging(slot)
+                continue
             req = slot.request
             fe = self._frontend.get(req.uid, {})
             tokens = np.concatenate(
@@ -689,6 +973,10 @@ class ContinuousBatchingEngine:
             now = self._clock()
             if req.enqueued_at is not None:
                 self._h_queue.observe(now - req.enqueued_at)
+                # consume the stamp: a preemption before the next admission
+                # opens a NEW stint, and an unconsumed stamp marks a stint
+                # that was never observed (see _preempt)
+                req.enqueued_at = None
             self._m_admitted.inc()
             if self.tracer.enabled:
                 self.tracer.instant("serve.admit", uid=req.uid,
@@ -718,6 +1006,13 @@ class ContinuousBatchingEngine:
             self._inputs[slot.index, 0] = tok
             if finished:
                 self._finish(slot)
+
+        # 1b. chunked prefill: stream this tick's prompt-token budget
+        #     through staging slots; completed prefills join the decode
+        #     batch below (same tick — with an infinite budget the timing
+        #     matches the monolithic path exactly).
+        if self._staging:
+            events.extend(self._run_prefill_chunks())
 
         # 2. block upkeep: every active slot needs a home for this tick's
         #    KV write; exhaustion preempts latest-admitted work first.

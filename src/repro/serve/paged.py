@@ -29,8 +29,18 @@ makes paged greedy decode token-identical to the dense path.
   table under refcounting (beam / parallel-sampling decode shares the
   whole prompt prefix for free).  A write to a *shared* block must first
   privatize it: ``ensure_writable`` returns the ``(src, dst)`` block copy
-  the device cache has to perform.  Only the last block is ever written
-  in append-only decode, so one copy per fork divergence suffices.
+  the device cache has to perform.  Append-only decode only ever writes
+  the last block, but a sliding-window *ring* wraps in place and can
+  write any block of the table, so ``ensure_writable`` takes the index
+  of the block actually being written (default: the last).
+* **Prefix sharing** — :class:`PrefixCache` is a radix/trie index keyed
+  on ``block_size``-token chunks of the token-id stream.  Each trie node
+  *pins* one pool block (``pin`` / ``unpin``: a bare refcount with no
+  table), and ``adopt`` grafts matched blocks into a new request's table
+  (refcount++), so admission skips prefill for the shared prefix
+  entirely.  Eviction is LRU over leaf nodes whose block refcount is 1
+  (the trie pin is the only owner) — blocks shared with a live table are
+  never evicted.
 
 Pure host-side bookkeeping (no jax imports) — same layering as
 :class:`~repro.serve.scheduler.SlotScheduler`.  Passing a
@@ -210,28 +220,231 @@ class BlockPool:
         self._tables[child_uid] = list(blocks)
         return list(blocks)
 
-    def ensure_writable(self, uid: int) -> Optional[Tuple[int, int]]:
-        """Privatize the request's *last* block before an append-only write.
+    def ensure_writable(
+        self, uid: int, block_index: Optional[int] = None
+    ) -> Optional[Tuple[int, int]]:
+        """Privatize the table entry about to be written (copy-on-write).
+
+        ``block_index`` is the position *within the table* of the block the
+        next device write lands in — ``table[row // block_size]`` for a
+        write to logical row ``row``.  The default (``None``) privatizes the
+        last entry, which is correct for append-only decode; a sliding-window
+        ring wraps in place and can write *any* entry, so ring callers must
+        pass the wrapped index or risk corrupting a fork sibling's KV.
 
         Returns ``(src, dst)`` when the block was shared — the caller must
         copy the device rows ``src -> dst`` before writing — or ``None``
         when the block was already exclusive.
         """
         table = self._tables[uid]
-        last = table[-1]
-        if self._refcount[last] == 1:
+        idx = len(table) - 1 if block_index is None else block_index
+        src = table[idx]
+        if self._refcount[src] == 1:
             return None
         if not self._free:
             raise PoolExhausted(
-                f"request {uid} needs a private copy of shared block {last} "
+                f"request {uid} needs a private copy of shared block {src} "
                 f"but the pool is exhausted"
             )
         dst = self._free.pop()
-        self._refcount[last] -= 1
+        self._refcount[src] -= 1
         self._refcount[dst] = 1
-        table[-1] = dst
+        table[idx] = dst
         self._track(allocated=1)
-        return last, dst
+        return src, dst
 
     def refcount(self, block: int) -> int:
         return self._refcount.get(block, 0)
+
+    # -- prefix sharing -------------------------------------------------------
+
+    def adopt(self, uid: int, blocks: List[int]) -> List[int]:
+        """Create ``uid``'s table from *existing* blocks (refcount++).
+
+        The prefix-cache admission path: the trie matched ``blocks`` for the
+        request's cached prefix, and the table starts out sharing them
+        exactly like a fork shares a parent's prompt.  The caller appends
+        fresh blocks for the uncached suffix afterwards.
+        """
+        if uid in self._tables:
+            raise ValueError(f"uid {uid} already owns a block table")
+        for b in blocks:
+            if self._refcount.get(b, 0) < 1:
+                raise ValueError(f"cannot adopt unallocated block {b}")
+        for b in blocks:
+            self._refcount[b] += 1
+        self._tables[uid] = list(blocks)
+        return list(blocks)
+
+    def pin(self, block: int) -> None:
+        """Take a bare (table-less) reference on an allocated block.
+
+        Trie nodes pin the block they map to so it survives the owning
+        request's release; a pinned block is freed only when ``unpin``
+        drops the final reference.
+        """
+        if self._refcount.get(block, 0) < 1:
+            raise ValueError(f"cannot pin unallocated block {block}")
+        self._refcount[block] += 1
+
+    def unpin(self, block: int) -> bool:
+        """Drop a pin; returns True when the block went back to the free
+        list (the pin was the last reference)."""
+        if self._refcount.get(block, 0) < 1:
+            raise ValueError(f"cannot unpin unallocated block {block}")
+        self._refcount[block] -= 1
+        if self._refcount[block] == 0:
+            del self._refcount[block]
+            self._free.append(block)
+            self._track(freed=1)
+            return True
+        return False
+
+
+class _TrieNode:
+    """One ``block_size``-token chunk of some cached prefix → one block."""
+
+    __slots__ = ("chunk", "block", "parent", "children", "touch")
+
+    def __init__(self, chunk, block, parent):
+        self.chunk = chunk
+        self.block = block
+        self.parent = parent
+        self.children: Dict[tuple, "_TrieNode"] = {}
+        self.touch = 0
+
+
+class PrefixCache:
+    """Radix/trie index over cached prompt prefixes, one block per node.
+
+    Keys are ``block_size``-token chunks of the token-id stream, so a path
+    from the root spells out a prefix in whole blocks and each node pins the
+    pool block holding that chunk's KV rows.  ``lookup`` walks the longest
+    cached prefix of a new request (LRU-touching the path) and ``insert``
+    grafts a finished prefill's *full* blocks in (partial tail blocks are
+    never shared — the owner keeps appending into them).
+
+    Eviction (``evict_one``) removes the least-recently-touched **leaf**
+    whose block refcount is 1, i.e. the trie pin is the only owner: interior
+    nodes are kept while descendants need the path, and blocks shared with a
+    live request table are never reclaimed.  The engine calls it on demand
+    when the free list runs dry, before falling back to preemption.
+    """
+
+    def __init__(
+        self,
+        pool: BlockPool,
+        *,
+        metrics: Optional[MetricsRegistry] = None,
+    ):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self.root = _TrieNode(None, -1, None)
+        self.hits = 0
+        self.tokens_saved = 0
+        self.evicted = 0
+        self._clock = 0
+        self._nodes = 0
+        self._m_hits = metrics.counter(
+            "kv.prefix.hits", "admissions that matched a cached prefix"
+        ) if metrics is not None else None
+        self._m_saved = metrics.counter(
+            "kv.prefix.tokens_saved", "prompt tokens served from cached blocks"
+        ) if metrics is not None else None
+        self._m_evicted = metrics.counter(
+            "kv.prefix.evicted", "trie nodes evicted (blocks unpinned)"
+        ) if metrics is not None else None
+
+    def __len__(self) -> int:
+        return self._nodes
+
+    def _chunk(self, tokens, i: int) -> tuple:
+        bs = self.block_size
+        return tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+
+    def lookup(self, tokens) -> Tuple[List[int], int]:
+        """Longest cached prefix of ``tokens`` → (block ids, rows matched).
+
+        At most ``(len(tokens) - 1) // block_size`` chunks match: at least
+        one suffix token always goes through prefill so admission has fresh
+        logits to sample the first output token from.
+        """
+        max_chunks = max(0, (len(tokens) - 1) // self.block_size)
+        node, blocks = self.root, []
+        for i in range(max_chunks):
+            child = node.children.get(self._chunk(tokens, i))
+            if child is None:
+                break
+            self._clock += 1
+            child.touch = self._clock
+            blocks.append(child.block)
+            node = child
+        if blocks:
+            self.hits += 1
+            self.tokens_saved += len(blocks) * self.block_size
+            if self._m_hits is not None:
+                self._m_hits.inc()
+                self._m_saved.inc(len(blocks) * self.block_size)
+        return blocks, len(blocks) * self.block_size
+
+    def insert(self, tokens, table: List[int]) -> int:
+        """Index a prefilled request's full blocks; returns nodes added.
+
+        ``table[i]`` must hold rows ``[i*bs, (i+1)*bs)`` of ``tokens``.
+        Chunks already present keep their existing (content-identical)
+        block; new nodes pin the donor's block so it outlives the donor.
+        """
+        n = min(len(tokens) // self.block_size, len(table))
+        node, added = self.root, 0
+        for i in range(n):
+            chunk = self._chunk(tokens, i)
+            child = node.children.get(chunk)
+            if child is None:
+                child = _TrieNode(chunk, table[i], node)
+                node.children[chunk] = child
+                self.pool.pin(table[i])
+                self._nodes += 1
+                added += 1
+            self._clock += 1
+            child.touch = self._clock
+            node = child
+        return added
+
+    def evict_one(self) -> bool:
+        """Unpin the LRU evictable leaf; True when a block was reclaimed."""
+        best = None
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            if nd.children:
+                stack.extend(nd.children.values())
+            elif self.pool.refcount(nd.block) == 1:
+                if best is None or nd.touch < best.touch:
+                    best = nd
+        if best is None:
+            return False
+        del best.parent.children[best.chunk]
+        self.pool.unpin(best.block)
+        self._nodes -= 1
+        self.evicted += 1
+        if self._m_evicted is not None:
+            self._m_evicted.inc()
+        return True
+
+    def clear(self) -> int:
+        """Drop every node and pin (post-order); returns nodes removed."""
+        removed = 0
+        stack = [(self.root, iter(list(self.root.children.values())))]
+        while stack:
+            node, it = stack[-1]
+            child = next(it, None)
+            if child is not None:
+                stack.append((child, iter(list(child.children.values()))))
+                continue
+            stack.pop()
+            if node is not self.root:
+                self.pool.unpin(node.block)
+                removed += 1
+        self.root.children.clear()
+        self._nodes = 0
+        return removed

@@ -1,11 +1,18 @@
 """Slot scheduler for continuous batching.
 
 The serving pool is a fixed set of ``num_slots`` KV-cache rows.  Each slot
-walks a three-state lifecycle:
+walks a three-state lifecycle (PREFILLING only under chunked prefill):
 
-    FREE ──admit──> ACTIVE ──finish──> FREE
-     ^                                  │
-     └──────────── (immediately reusable) ──────────────┘
+    FREE ──admit──> [PREFILLING ──chunks done──>] ACTIVE ──finish──> FREE
+     ^                                                                │
+     └──────────────────── (immediately reusable) ────────────────────┘
+
+With chunked prefill (DESIGN.md §12) an admitted slot is *bound* but not
+yet decoding: the engine feeds its prompt through in budgeted chunks over
+several ticks while ACTIVE slots keep decoding.  ``Slot.prefilling`` marks
+that window; ``active_slots`` excludes such slots (they have no decode row
+yet) and ``occupied_slots`` includes them (they hold resources and are
+preemptible).
 
 * **Submission** (`submit`) appends a :class:`Request` to a FIFO pending
   queue.  The queue is unbounded — backpressure happens at *admission*, not
@@ -87,6 +94,10 @@ class Slot:
     index: int
     request: Optional[Request] = None
     generated: List[int] = dataclasses.field(default_factory=list)
+    # True while the engine is still streaming prompt chunks into the
+    # slot's cache row (chunked prefill): bound, holds blocks, but not yet
+    # part of the decode batch.
+    prefilling: bool = False
 
     @property
     def free(self) -> bool:
@@ -96,10 +107,12 @@ class Slot:
         assert self.free, f"slot {self.index} is busy"
         self.request = request
         self.generated = []
+        self.prefilling = False
 
     def release(self) -> Request:
         assert self.request is not None
         req, self.request = self.request, None
+        self.prefilling = False
         return req
 
 
@@ -188,6 +201,18 @@ class SlotScheduler:
 
     @property
     def active_slots(self) -> List[Slot]:
+        """Slots in the decode batch (bound and done prefilling)."""
+        return [s for s in self.slots if not s.free and not s.prefilling]
+
+    @property
+    def prefilling_slots(self) -> List[Slot]:
+        """Bound slots still streaming prompt chunks (chunked prefill)."""
+        return [s for s in self.slots if not s.free and s.prefilling]
+
+    @property
+    def occupied_slots(self) -> List[Slot]:
+        """Every bound slot — decoding or prefilling; the preemption
+        candidate set (both kinds hold KV resources)."""
         return [s for s in self.slots if not s.free]
 
     def done(self) -> bool:

@@ -198,6 +198,44 @@ def test_histogram_deterministic_and_empty_cases():
         obs.Histogram("bad", buckets=(2.0, 1.0))
 
 
+def test_histogram_empty_snapshot_never_leaks_inf_sentinels():
+    """A zero-count series holds ±inf min/max init sentinels internally;
+    the snapshot must mask both (None), stay JSON-serializable, and the
+    percentiles must be None rather than interpolated garbage."""
+    h = obs.Histogram("lat")
+    h.observe(1.0, route="a")  # a sibling series: 'b' stays empty
+    h.count(route="b")  # touch only — count() must not create a series
+    snap = {s["labels"].get("route"): s for s in h.snapshot()}
+    assert "b" not in snap
+    h._get({"route": "b"})  # force an empty series into existence
+    snap = {s["labels"].get("route"): s for s in h.snapshot()}
+    empty = snap["b"]
+    assert empty["count"] == 0 and empty["sum"] == 0.0
+    assert empty["min"] is None and empty["max"] is None
+    assert empty["p50"] is None and empty["p95"] is None and empty["p99"] is None
+    out = json.dumps(snap["b"])  # inf would raise / emit non-JSON
+    assert "Infinity" not in out
+    assert h.percentile(50, route="b") is None
+
+
+def test_histogram_single_observation_is_exact_everywhere():
+    """One sample: every percentile is that exact value — including a
+    sample in the unbounded overflow bucket, where interpolation against
+    the +inf upper edge must never run."""
+    h = obs.Histogram("lat", buckets=(1.0, 2.0))
+    h.observe(7.25)  # overflow bucket: hi edge would be +inf
+    for p in (0, 50, 95, 99, 100):
+        assert h.percentile(p) == 7.25
+    snap = h.snapshot()[0]
+    assert snap["min"] == snap["max"] == snap["p50"] == 7.25
+    json.dumps(snap)
+    # a constant multi-sample series is just as exact
+    c = obs.Histogram("const", buckets=(1.0, 2.0))
+    for _ in range(5):
+        c.observe(0.5)
+    assert c.percentile(50) == 0.5 and c.percentile(99) == 0.5
+
+
 def test_registry_get_or_create_and_kind_conflict():
     reg = obs.MetricsRegistry()
     c = reg.counter("x", help="calls")

@@ -150,6 +150,62 @@ def test_paged_preemption_lifecycle_metrics_and_trace():
     assert eng.metrics.histogram("serve.itl_s").count() == tokens - 3
 
 
+def test_preempt_restamp_counts_every_queue_stint_exactly_once():
+    """Regression for the restamp-on-preempt bug: each wait stint lands
+    in serve.queue_wait_s exactly once.  The first stint is observed at
+    admission (stamp consumed); preemption opens a *new* stint from the
+    eviction time, and re-admission observes exactly that gap — nothing
+    lost, nothing double-counted."""
+    cfg, params = _model_params()
+    clk = FakeClock()
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=1, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4),
+        clock=clk)
+    eng.submit(RNG.integers(0, cfg.vocab_size, (6,)), 8)  # t = 0
+    clk.advance(2.0)
+    eng.step()  # admit at t=2: first stint 2.0, stamp consumed
+    assert _hist_sum(eng, "serve.queue_wait_s") == (1, pytest.approx(2.0))
+    clk.advance(1.0)
+    slot = next(s for s in eng.scheduler.slots if not s.free)
+    eng._preempt(slot)  # t=3: stint already observed -> restamp to now
+    clk.advance(4.0)
+    eng.step()  # re-admit at t=7: second stint is 7-3=4, not 7-0=7
+    assert _hist_sum(eng, "serve.queue_wait_s") == (2, pytest.approx(6.0))
+    while not eng.scheduler.done():
+        clk.advance(1.0)
+        eng.step()
+    count, total = _hist_sum(eng, "serve.queue_wait_s")
+    assert total == pytest.approx(6.0)  # no stint observed twice
+    assert count == eng.metrics.counter("serve.requests.admitted").value()
+
+
+def test_preempt_before_admission_observe_keeps_the_original_stint():
+    """The other half of the fix: a victim evicted before its admission
+    observe ran still carries its original stamp — an unconditional
+    restamp would silently drop that whole wait from the histogram."""
+    cfg, params = _model_params()
+    clk = FakeClock()
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=1, max_len=MAX_LEN,
+                         kv_layout="paged", kv_block_size=4),
+        clock=clk)
+    eng.submit(RNG.integers(0, cfg.vocab_size, (6,)), 3)  # t = 0
+    clk.advance(1.0)
+    (slot,) = eng.scheduler.admit()  # bound, but not yet observed
+    eng._preempt(slot)  # t=1: stamp still pending -> must NOT restamp
+    clk.advance(2.0)
+    eng.step()  # admit at t=3: the single stint spans the whole wait
+    assert _hist_sum(eng, "serve.queue_wait_s") == (1, pytest.approx(3.0))
+    while not eng.scheduler.done():
+        clk.advance(1.0)
+        eng.step()
+    assert eng.metrics.histogram("serve.queue_wait_s").count() == \
+        eng.metrics.counter("serve.requests.admitted").value()
+
+
 # ---------------------------------------------------------------------------
 # Trace export from a serve run (the acceptance-criterion shape)
 

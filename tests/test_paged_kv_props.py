@@ -12,6 +12,15 @@ the allocator invariants are checked after **every** operation:
 * the reserved scratch block 0 is never handed out, never freed, never in
   any table.
 
+With a ``PrefixCache`` attached (DESIGN.md §12) the machine additionally
+drives trie traffic — prefix lookup/adopt admissions, inserts, LRU
+eviction — and the invariants extend to the trie's bare pins:
+
+* a pinned block is never on the free list (pins are references);
+* refcounts == table references + trie pins, exactly;
+* draining every table and clearing the trie returns the pool to
+  pristine (no leaked pin survives the trie that took it).
+
 Runs under hypothesis when installed; otherwise the deterministic
 ``_prop_fallback`` sweep (boundary draws + seeded random draws) exercises
 the same properties so tier-1 never depends on an optional package.
@@ -26,26 +35,39 @@ try:
 except ImportError:  # pragma: no cover - exercised on hypothesis-less CI
     from _prop_fallback import given, settings, st
 
-from repro.serve.paged import SCRATCH_BLOCK, BlockPool, PoolExhausted
+from repro.serve.paged import SCRATCH_BLOCK, BlockPool, PoolExhausted, PrefixCache
 
 POOL_BLOCKS = 9  # 8 usable + scratch: small enough to hit exhaustion often
 BLOCK_SIZE = 4
 
 
-def check_invariants(pool: BlockPool) -> None:
+def _trie_pins(trie: PrefixCache) -> Counter:
+    """One pin per node, by construction of insert/evict/clear."""
+    pins = Counter()
+    stack = list(trie.root.children.values())
+    while stack:
+        node = stack.pop()
+        pins[node.block] += 1
+        stack.extend(node.children.values())
+    return pins
+
+
+def check_invariants(pool: BlockPool, pins: Counter = None) -> None:
     free = pool._free
     tables = pool._tables
     refcount = pool._refcount
+    pins = pins or Counter()
 
     # no double-free: free list is duplicate-free and disjoint from live
+    # (table-referenced or trie-pinned)
     assert len(free) == len(set(free)), f"duplicate ids in free list: {free}"
-    live = set()
+    live = set(pins)
     for table in tables.values():
         live.update(table)
-    assert not (set(free) & live), "block is both free and table-referenced"
+    assert not (set(free) & live), "block is both free and referenced"
 
-    # refcounts match the live tables exactly
-    expected = Counter()
+    # refcounts match the live tables + trie pins exactly
+    expected = Counter(pins)
     for table in tables.values():
         expected.update(table)
     assert dict(refcount) == dict(expected), (refcount, expected)
@@ -165,3 +187,97 @@ def test_copy_on_write_privatizes_only_the_last_block():
     assert pool.refcount(table[-1]) == 1 and pool.refcount(dst) == 1
     assert pool.ensure_writable(2) is None  # already exclusive
     check_invariants(pool)
+
+
+# -- prefix-trie machine: pool + PrefixCache traffic (DESIGN.md §12) --------
+
+
+def _stream_tokens(stream: int, n_tokens: int):
+    """Deterministic token stream per id: streams 2k and 2k+1 share their
+    first chunk and diverge at the second, so the trie grows chains *and*
+    branch points under random traffic."""
+    return [
+        ((stream // 2) + (i // BLOCK_SIZE) * (1 + stream % 2)) % 5
+        for i in range(n_tokens)
+    ]
+
+
+def drive_prefix(pool: BlockPool, opcodes) -> None:
+    """Interleave prefix-cache admissions (lookup + adopt + insert) with
+    releases, LRU eviction, and plain allocations; re-check the extended
+    pin-aware invariants after every operation."""
+    trie = PrefixCache(pool)
+    next_uid = 0
+    live = []  # uids owning a table
+    for code in opcodes:
+        op, arg = code % 4, code // 4
+        if op == 0:  # prefix admission: longest cached prefix + suffix
+            tokens = _stream_tokens(arg % 4, BLOCK_SIZE * (1 + arg % 3) + 2)
+            blocks, rows = trie.lookup(tokens)
+            need = pool.blocks_for_tokens(len(tokens)) - len(blocks)
+            if pool.can_allocate(need):
+                pool.adopt(next_uid, blocks)
+                for _ in range(need):
+                    pool.append(next_uid)
+                check_invariants(pool, _trie_pins(trie))
+                # "prefill done": index the full blocks (idempotent for
+                # chunks already cached — first writer wins)
+                trie.insert(tokens, pool.table(next_uid))
+                live.append(next_uid)
+                next_uid += 1
+        elif op == 1 and live:  # retire: pins must keep cached blocks
+            pool.release(live.pop(arg % len(live)))
+        elif op == 2:  # pool pressure: reclaim one LRU leaf (or refuse)
+            before = pool.free_blocks
+            if trie.evict_one():
+                assert pool.free_blocks == before + 1
+        elif op == 3:  # LRU touch: a lookup that may miss entirely
+            trie.lookup(_stream_tokens(arg % 4, BLOCK_SIZE + 1))
+        check_invariants(pool, _trie_pins(trie))
+
+    # drain every table: trie pins alone must keep their blocks live
+    for uid in live:
+        pool.release(uid)
+        check_invariants(pool, _trie_pins(trie))
+    pins = _trie_pins(trie)
+    assert all(pool.refcount(b) == n for b, n in pins.items())
+    assert pool.used_blocks == len(pins)
+    # clearing the trie drops the last references: pool back to pristine
+    trie.clear()
+    check_invariants(pool)
+    assert pool.free_blocks == pool.usable_blocks
+    assert not pool._tables and not pool._refcount
+
+
+@settings(max_examples=200, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 10_000), min_size=1, max_size=80))
+def test_prefix_trie_invariants_random_traffic(opcodes):
+    drive_prefix(BlockPool(POOL_BLOCKS, BLOCK_SIZE), opcodes)
+
+
+@settings(max_examples=100, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 10_000), min_size=1, max_size=120))
+def test_prefix_trie_invariants_tiny_pool(opcodes):
+    # 3 usable blocks: adoption + insert constantly at the boundary
+    drive_prefix(BlockPool(4, BLOCK_SIZE), opcodes)
+
+
+def test_trie_pin_is_never_freed_while_referenced():
+    """Directed: a block both pinned and table-referenced survives either
+    single release; only dropping *both* references frees it."""
+    pool = BlockPool(POOL_BLOCKS, BLOCK_SIZE)
+    trie = PrefixCache(pool)
+    tokens = _stream_tokens(0, BLOCK_SIZE * 2)
+    table = pool.allocate(0, 2)
+    trie.insert(tokens, table)
+    check_invariants(pool, _trie_pins(trie))
+    pool.release(0)  # trie pins keep both blocks
+    assert pool.used_blocks == 2
+    adopted = pool.adopt(1, trie.lookup(tokens + [9])[0])
+    assert adopted == table
+    assert not trie.evict_one()  # every leaf shared with uid 1: refused
+    pool.release(1)
+    assert trie.evict_one() and pool.used_blocks == 1
+    check_invariants(pool, _trie_pins(trie))
+    trie.clear()
+    assert pool.free_blocks == pool.usable_blocks

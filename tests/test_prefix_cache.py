@@ -1,0 +1,366 @@
+"""Shared-prefix KV cache + chunked prefill (DESIGN.md §12).
+
+Three layers under test:
+
+* ``PrefixCache`` — the radix trie over block-size token chunks: lookup
+  caps (one suffix token always prefills), full-block-only inserts, pins
+  that outlive the donor request, LRU leaf eviction gated on refcount.
+* ``BlockPool.ensure_writable(block_index=...)`` — the any-index
+  copy-on-write fix: a sliding-window ring wraps in place and writes
+  blocks *other than the last*, so privatizing only the tail corrupts a
+  fork sibling's KV (the regression reproduced here at the device level).
+* The continuous engine with ``prefix_cache`` / ``prefill_chunk_tokens``
+  — greedy output must be token-identical to the uncached monolithic
+  path on every arch family, with ``tokens_saved`` > 0 on shared-prefix
+  traffic and trie eviction (not deadlock) under pool pressure.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.param import materialize
+from repro.models.registry import build_model
+from repro.serve.engine import ContinuousBatchingEngine, ContinuousConfig
+from repro.serve.paged import BlockPool, PrefixCache
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+MAX_LEN = 40
+
+
+def _model_params(arch="granite_8b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    return cfg, materialize(model.param_specs(), KEY)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache trie (host allocator state only)
+
+
+def test_lookup_on_empty_trie_is_a_miss():
+    trie = PrefixCache(BlockPool(9, 4))
+    blocks, rows = trie.lookup(list(range(12)))
+    assert blocks == [] and rows == 0
+    assert trie.hits == 0 and trie.tokens_saved == 0
+
+
+def test_lookup_never_covers_the_whole_prompt():
+    """At least one suffix token must prefill so admission has logits to
+    sample from: an exact-multiple prompt matches one chunk short."""
+    pool = BlockPool(9, 4)
+    trie = PrefixCache(pool)
+    toks = list(range(8))
+    table = pool.allocate(0, 2)
+    assert trie.insert(toks, table) == 2
+    blocks, rows = trie.lookup(toks)  # same 8 tokens: only block 0 usable
+    assert blocks == table[:1] and rows == 4
+    blocks, rows = trie.lookup(toks + [99])  # 1 extra token: both blocks
+    assert blocks == table and rows == 8
+    assert trie.hits == 2 and trie.tokens_saved == 4 + 8
+
+
+def test_insert_indexes_full_blocks_only():
+    pool = BlockPool(9, 4)
+    trie = PrefixCache(pool)
+    table = pool.allocate(0, 3)  # 10 rows: the tail block is half-full
+    assert trie.insert(list(range(10)), table) == 2
+    assert len(trie) == 2
+    # re-inserting the same prefix adds nothing (first writer wins)
+    assert trie.insert(list(range(10)), table) == 0
+
+
+def test_shared_prefix_branches_share_trie_nodes():
+    pool = BlockPool(9, 4)
+    trie = PrefixCache(pool)
+    a = pool.allocate(0, 2)
+    b = pool.allocate(1, 2)
+    trie.insert([1, 2, 3, 4, 5, 6, 7, 8], a)
+    # same first chunk, different second chunk: only one new node
+    assert trie.insert([1, 2, 3, 4, 9, 9, 9, 9], b) == 1
+    assert len(trie) == 3
+    # the shared first chunk kept the first writer's block
+    blocks, _ = trie.lookup([1, 2, 3, 4, 9, 9, 9, 9, 0])
+    assert blocks == [a[0], b[1]]
+
+
+def test_trie_pins_survive_donor_release():
+    """The whole point of pinning: cached KV outlives the request that
+    prefilled it, and a later admission adopts the same blocks."""
+    pool = BlockPool(9, 4)
+    trie = PrefixCache(pool)
+    toks = list(range(8))
+    table = pool.allocate(0, 2)
+    trie.insert(toks, table)
+    freed = pool.release(0)
+    assert freed == []  # pins keep every block allocated
+    assert all(pool.refcount(b) == 1 for b in table)
+    blocks, rows = trie.lookup(toks + [5])
+    assert blocks == table and rows == 8
+    adopted = pool.adopt(7, blocks)
+    assert adopted == table
+    assert all(pool.refcount(b) == 2 for b in table)
+
+
+def test_eviction_is_lru_leaf_only_and_respects_live_tables():
+    pool = BlockPool(9, 4)
+    trie = PrefixCache(pool)
+    a = pool.allocate(0, 2)
+    b = pool.allocate(1, 1)
+    trie.insert([1, 2, 3, 4, 5, 6, 7, 8], a)  # chain of 2 nodes
+    trie.insert([9, 9, 9, 9], b)              # separate branch
+    pool.release(0)
+    pool.release(1)
+    trie.lookup([9, 9, 9, 9, 0])  # touch branch b: branch a is now LRU
+    assert trie.evict_one()
+    # the LRU *leaf* went first: a's tail node, never the interior node
+    assert pool.refcount(a[1]) == 0 and pool.refcount(a[0]) == 1
+    # a block adopted by a live table is not evictable
+    pool.adopt(5, [a[0]])
+    pool.adopt(6, [b[0]])
+    trie.lookup([1, 2, 3, 4, 0])  # a's head is LRU... but both are shared
+    assert not trie.evict_one()
+    pool.release(5)
+    assert trie.evict_one()  # a's head is reclaimable again
+    assert trie.evicted == 2
+
+
+def test_clear_returns_pool_to_pristine():
+    pool = BlockPool(9, 4)
+    trie = PrefixCache(pool)
+    for uid in range(3):
+        toks = RNG.integers(0, 50, (8,)).tolist()
+        trie.insert(toks, pool.allocate(uid, 2))
+        pool.release(uid)
+    nodes = len(trie)
+    assert nodes > 0 and pool.used_blocks > 0
+    assert trie.clear() == nodes
+    assert len(trie) == 0 and trie.clear() == 0
+    assert pool.free_blocks == pool.usable_blocks
+    assert not pool._refcount
+
+
+# ---------------------------------------------------------------------------
+# ensure_writable(block_index=...) — the ring-wrap CoW fix
+
+
+def test_ensure_writable_privatizes_the_indexed_block():
+    pool = BlockPool(9, 4)
+    table = pool.allocate(0, 3)
+    pool.fork(0, 1)
+    # a ring wrap writes block 0, not the tail: index 0 must privatize
+    src, dst = pool.ensure_writable(1, block_index=0)
+    assert src == table[0] and pool.table(1)[0] == dst
+    assert pool.table(1)[1:] == table[1:]  # untouched entries still shared
+    assert pool.refcount(src) == 1 and pool.refcount(dst) == 1
+    assert pool.ensure_writable(1, block_index=0) is None  # now exclusive
+    # the default (no index) remains the append-only tail behavior
+    src2, _ = pool.ensure_writable(1)
+    assert src2 == table[-1]
+
+
+def _cow_decode(model, params, host, dev, tables, uids, tokens, cache_t):
+    """One lockstep paged decode tick under the fork CoW protocol: each
+    slot privatizes the block its wrapped write lands in before the
+    device step (exactly what an engine must do for forked tables)."""
+    bs = host.block_size
+    for s, uid in enumerate(uids):
+        row = int(dev["pos"][s]) % cache_t
+        cow = host.ensure_writable(uid, block_index=row // bs)
+        if cow is not None:
+            src, dst = cow
+            dev = model.copy_block(dev, src, dst)
+            tables[s][row // bs] = dst
+    logits, dev = model.decode_step_paged(
+        params, dev, tokens, jnp.asarray(tables, jnp.int32), cache_t=cache_t)
+    return logits, dev
+
+
+def test_ring_fork_sibling_survives_wrap():
+    """Regression for the last-block-only CoW assumption: fork a
+    sliding-window request, decode both branches past the ring wrap, and
+    check the sibling's logits against a run where it owned private
+    blocks from the start.  Privatizing only the tail block (the old
+    behavior) corrupts the sibling the moment the wrapped write lands in
+    a still-shared block — reproduced below as the negative control."""
+    cfg, params = _model_params("mixtral_8x22b")  # sliding_window = 16
+    model = build_model(cfg)
+    bs, steps = 4, 6
+    cache_t = model.cache_len(MAX_LEN)  # == window: writes wrap at row 0
+    width = cache_t // bs
+    prompt = jnp.asarray(RNG.integers(0, cfg.vocab_size, (1, cache_t)), jnp.int32)
+    _, cache = model.prefill(params, prompt, MAX_LEN)
+    feeds = RNG.integers(0, cfg.vocab_size, (steps, 2, 1)).astype(np.int32)
+
+    def run(forked, cow_index):
+        host = BlockPool(2 * width + 2, bs)
+        ta = host.allocate(0, width)
+        dev = model.init_paged_cache(2 * width + 2, bs, num_slots=2)
+        dev = model.write_slot_paged(dev, cache, 0, jnp.asarray(ta, jnp.int32))
+        if forked:
+            tb = host.fork(0, 1)
+            dev = {**dev, "len": dev["len"].at[1].set(dev["len"][0]),
+                   "pos": dev["pos"].at[1].set(dev["pos"][0])}
+        else:
+            tb = host.allocate(1, width)
+            dev = model.write_slot_paged(dev, cache, 1, jnp.asarray(tb, jnp.int32))
+        tables = [list(ta), list(tb)]
+        out = []
+        for i in range(steps):
+            for s, uid in enumerate((0, 1)):
+                row = int(dev["pos"][s]) % cache_t
+                idx = row // bs if cow_index else None
+                cowed = host.ensure_writable(uid, block_index=idx)
+                if cowed is not None:
+                    dev = model.copy_block(dev, *cowed)
+                    tables[s][row // bs if cow_index else -1] = cowed[1]
+            lg, dev = model.decode_step_paged(
+                params, dev, jnp.asarray(feeds[i]),
+                jnp.asarray(tables, jnp.int32), cache_t=cache_t)
+            out.append(np.asarray(lg))
+        return np.stack(out)
+
+    truth = run(forked=False, cow_index=True)
+    fixed = run(forked=True, cow_index=True)
+    np.testing.assert_array_equal(fixed, truth)
+    # negative control: tail-only privatization corrupts a sibling once
+    # the wrapped write lands in a shared non-tail block
+    buggy = run(forked=True, cow_index=False)
+    assert not np.array_equal(buggy, truth)
+
+
+# ---------------------------------------------------------------------------
+# engine: chunked prefill + prefix sharing, token parity with the
+# uncached monolithic path
+
+
+def _run_engine(cfg, params, reqs, **kw):
+    eng = ContinuousBatchingEngine(
+        cfg, params, ContinuousConfig(num_slots=2, max_len=MAX_LEN, **kw))
+    uids = [eng.submit(p, g, **fe) for p, g, fe in reqs]
+    done = eng.run(max_ticks=500)
+    return [done[u] for u in uids], eng
+
+
+def _shared_prefix_reqs(cfg, n=5, prefix_len=12):
+    rng = np.random.default_rng(7)
+    pre = rng.integers(0, cfg.vocab_size, (prefix_len,))
+    return [
+        (np.concatenate([pre, rng.integers(0, cfg.vocab_size,
+                                           (int(rng.integers(2, 7)),))]),
+         int(rng.integers(3, 7)), {})
+        for _ in range(n)
+    ]
+
+
+def test_prefix_cache_parity_and_tokens_saved():
+    cfg, params = _model_params()
+    reqs = _shared_prefix_reqs(cfg)
+    base, _ = _run_engine(cfg, params, reqs,
+                          kv_layout="paged", kv_block_size=4)
+    out, eng = _run_engine(cfg, params, reqs,
+                           kv_layout="paged", kv_block_size=4,
+                           prefix_cache=True, prefill_chunk_tokens=6)
+    assert out == base
+    st = eng.kv_stats()["prefix"]
+    assert st["hits"] > 0 and st["tokens_saved"] > 0
+    assert eng.metrics.counter("kv.prefix.tokens_saved").value() == \
+        st["tokens_saved"]
+    # everything drains: live tables gone, only trie pins hold blocks
+    assert eng.block_pool.used_blocks == len(eng.prefix)
+
+
+def test_prefix_cache_parity_under_eviction_pressure():
+    """A pool too small to keep trie + live tables resident forces LRU
+    trie eviction (and possibly preemption) — output stays identical."""
+    cfg, params = _model_params()
+    reqs = _shared_prefix_reqs(cfg, n=7)
+    base, _ = _run_engine(cfg, params, reqs,
+                          kv_layout="paged", kv_block_size=4)
+    out, eng = _run_engine(cfg, params, reqs,
+                           kv_layout="paged", kv_block_size=4,
+                           kv_pool_blocks=9,
+                           prefix_cache=True, prefill_chunk_tokens=6)
+    assert out == base
+    st = eng.kv_stats()["prefix"]
+    assert st["evicted"] > 0
+    assert st["tokens_saved"] > 0
+
+
+def test_chunked_prefill_parity_ring_and_dense():
+    """Chunked prefill alone (no sharing) must be token-identical on the
+    ring arch (linear staging + finalize) and the dense layout."""
+    cfg, params = _model_params("mixtral_8x22b")
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab_size, (n,)), g, {})
+            for n, g in ((20, 4), (7, 5), (18, 3))]
+    base, _ = _run_engine(cfg, params, reqs,
+                          kv_layout="paged", kv_block_size=4)
+    out, eng = _run_engine(cfg, params, reqs,
+                           kv_layout="paged", kv_block_size=4,
+                           prefill_chunk_tokens=8)
+    assert out == base
+    dense, _ = _run_engine(cfg, params, reqs, prefill_chunk_tokens=8)
+    basedense, _ = _run_engine(cfg, params, reqs)
+    assert dense == basedense
+
+
+def test_chunked_prefill_parity_vlm_mrope():
+    cfg, params = _model_params("qwen2_vl_7b")
+    rng = np.random.default_rng(5)
+    reqs = []
+    for n, g in ((5, 3), (9, 2)):
+        pe = rng.standard_normal(
+            (1, cfg.num_patches, cfg.frontend_dim)).astype(np.float32)
+        reqs.append((rng.integers(0, cfg.vocab_size, (n,)), g,
+                     {"patch_embeds": pe}))
+    base, _ = _run_engine(cfg, params, reqs,
+                          kv_layout="paged", kv_block_size=4)
+    out, eng = _run_engine(cfg, params, reqs,
+                           kv_layout="paged", kv_block_size=4,
+                           prefix_cache=True, prefill_chunk_tokens=6)
+    assert out == base
+    # frontend requests never share through the trie (patch rows are not
+    # keyed by token ids), but the engine still serves them chunked
+    assert eng.kv_stats()["prefix"]["hits"] == 0
+
+
+def test_prefix_cache_opt_outs_and_validation():
+    cfg, params = _model_params("mixtral_8x22b")
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN, kv_layout="paged",
+                         kv_block_size=4, prefix_cache=True))
+    assert eng.prefix is None  # rings opt out: the window loses the prefix
+    cfg_m, params_m = _model_params("granite_moe_1b_a400m")
+    eng_m = ContinuousBatchingEngine(
+        cfg_m, params_m,
+        ContinuousConfig(num_slots=2, max_len=MAX_LEN, kv_layout="paged",
+                         kv_block_size=4, prefix_cache=True))
+    assert eng_m.prefix is None  # MoE KV depends on sequence-global state
+    cfg_d, params_d = _model_params()
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ContinuousBatchingEngine(
+            cfg_d, params_d,
+            ContinuousConfig(num_slots=2, max_len=MAX_LEN,
+                             prefix_cache=True))
+    with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+        ContinuousBatchingEngine(
+            cfg_d, params_d,
+            ContinuousConfig(num_slots=2, max_len=MAX_LEN,
+                             prefill_chunk_tokens=0))
+
+
+def test_kv_stats_prefix_field_shape():
+    cfg, params = _model_params()
+    _, eng = _run_engine(cfg, params, _shared_prefix_reqs(cfg, n=2),
+                         kv_layout="paged", kv_block_size=4,
+                         prefix_cache=True)
+    st = eng.kv_stats()["prefix"]
+    assert set(st) == {"hits", "tokens_saved", "evicted", "nodes"}
+    _, eng2 = _run_engine(cfg, params, _shared_prefix_reqs(cfg, n=2),
+                          kv_layout="paged", kv_block_size=4)
+    assert eng2.kv_stats()["prefix"] is None
