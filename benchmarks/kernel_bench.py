@@ -146,6 +146,118 @@ def sweep_paged_decode(
             print(f"{row['name']},{ratio:.2f}x,counted_pool_read_bytes")
 
 
+def sweep_paged_kv_dtype(
+    records: List[Dict[str, Any]], impl_filter: Optional[str],
+    dtype_filter: Optional[str] = None,
+) -> None:
+    """Quantized paged decode across ``kv_dtype`` layouts (DESIGN.md §13).
+
+    Fixed at the pool-256 / live-8 acceptance point of the paged sweep:
+    the column that matters is ``kv_bytes_per_token`` — counted pool-read
+    bytes per decode token (codes + the per-(block, head) scale rows) —
+    plus ``pool_bytes``, the whole pool's resident footprint at that
+    dtype.  Two invariants are asserted, not just printed: the int8
+    layout reads ≤ 0.55x the fp32 bytes/token (the compression target CI
+    re-checks from serve_throughput), and the quantized pallas_paged
+    jaxpr still never materializes the [S, W*bs, H, D] gathered window.
+    """
+    from repro.core import kvquant
+
+    rng = np.random.default_rng(0)
+    s, w, bs, hq, hkv, d, live = 4, 16, 16, 4, 2, 64, 8
+    n = s * w + 1
+    q = jnp.asarray(rng.normal(size=(s, 1, hq, d)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(n, bs, hkv, d)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(n, bs, hkv, d)), jnp.float32)
+    tables = jnp.arange(1, s * w + 1, dtype=jnp.int32).reshape(s, w)
+    kvl = jnp.full((s,), live, jnp.int32)
+    per_tok: Dict[tuple, float] = {}
+    for kv_dtype in kvquant.KV_DTYPES:
+        if dtype_filter and kv_dtype != dtype_filter:
+            continue
+        if kv_dtype == "fp32":
+            kp, vp, scales = kf, vf, None
+        else:
+            kp, ks = kvquant.quantize_blocks(kf, kv_dtype)
+            vp, vs = kvquant.quantize_blocks(vf, kv_dtype)
+            scales = (ks, vs)
+        scale_bytes = 2 * 4 * hkv if scales is not None else 0  # k+v, f32
+        for backend in ops.backends("paged_attention"):
+            if impl_filter and backend.impl != impl_filter:
+                continue
+            spec = ops.validate(ops.PagedAttentionSpec(
+                impl=backend.impl, block_size=bs, kv_dtype=kv_dtype))
+
+            def call():
+                return ops.paged_attention(
+                    q, kp, vp, tables, spec,
+                    kv_valid_len=kvl, kv_len=w * bs, kv_scales=scales,
+                )
+
+            us = _t(call, iters=2)
+            gb = ops.paged_gather_bytes(
+                backend.impl, table_width=w, block_size=bs,
+                live_lens=[live] * s, num_kv_heads=hkv, head_dim=d,
+                dtype_bytes=kp.dtype.itemsize,
+                scale_bytes_per_block=scale_bytes,
+            )
+            bpt = gb / s
+            pool_bytes = n * (2 * bs * hkv * d * kp.dtype.itemsize
+                              + scale_bytes)
+            per_tok[(backend.impl, kv_dtype)] = bpt
+            _record(
+                records,
+                f"paged_decode_{backend.impl}_{kv_dtype}_pool{w * bs}"
+                f"_live{live}",
+                us, spec, gather_bytes=gb, kv_bytes_per_token=round(bpt, 1),
+                pool_bytes=pool_bytes,
+            )
+            if backend.impl == "pallas_paged" and scales is not None:
+                assert not _materializes_window(
+                    call, (s, w * bs, hkv, d)
+                ), f"{kv_dtype} pallas_paged materialized the gathered window"
+    for impl in sorted({i for i, _ in per_tok}):
+        f32, i8 = per_tok.get((impl, "fp32")), per_tok.get((impl, "int8"))
+        if f32 is None or i8 is None:
+            continue
+        ratio = i8 / f32
+        row = {
+            "name": f"paged_decode_kv_compression_{impl}_pool256_live8",
+            "int8_vs_fp32_bytes_per_token": round(ratio, 3),
+            "fp32_bytes_per_token": round(f32, 1),
+            "int8_bytes_per_token": round(i8, 1),
+        }
+        records.append(row)
+        print(f"{row['name']},{ratio:.3f}x,counted_bytes_per_token")
+        assert ratio <= 0.55, (
+            f"int8 paged reads {ratio:.2f}x the fp32 bytes/token for "
+            f"{impl} (compression target: <= 0.55x)"
+        )
+
+
+def _materializes_window(call, shape) -> bool:
+    """True if any intermediate in ``call``'s jaxpr has ``shape`` — the
+    gathered-operand probe from tests/test_paged_kernel.py, applied to the
+    quantized kernel here so the bench's perf claim carries its own
+    structural check."""
+    import jax
+
+    def walk(jaxpr, acc):
+        for eqn in jaxpr.eqns:
+            acc.extend(v.aval for v in eqn.outvars)
+            for val in eqn.params.values():
+                items = val if isinstance(val, (tuple, list)) else [val]
+                for item in items:
+                    if isinstance(item, jax.core.ClosedJaxpr):
+                        walk(item.jaxpr, acc)
+                    elif isinstance(item, jax.core.Jaxpr):
+                        walk(item, acc)
+        return acc
+
+    avals = walk(jax.make_jaxpr(call)().jaxpr, [])
+    return any(getattr(a, "shape", None) == tuple(shape) for a in avals)
+
+
 def sweep_matmul(records: List[Dict[str, Any]], impl_filter: Optional[str]) -> None:
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
@@ -191,9 +303,16 @@ def main(argv: Optional[List[str]] = None) -> bool:
     )
     ap.add_argument(
         "--only", default=None,
-        choices=("softmax", "attention", "paged_decode", "ssd_scan", "matmul"),
+        choices=("softmax", "attention", "paged_decode", "paged_kv_dtype",
+                 "ssd_scan", "matmul"),
         help="run a single sweep (e.g. --only paged_decode for the "
-        "BENCH_paged_decode.json emission)",
+        "BENCH_paged_decode.json emission, --only paged_kv_dtype for "
+        "BENCH_kv_quant.json)",
+    )
+    ap.add_argument(
+        "--kv-dtype", default=None, choices=("fp32", "int8", "fp8_e4m3"),
+        help="restrict the paged_kv_dtype sweep to one KV storage layout "
+        "(default: sweep all three)",
     )
     args = ap.parse_args(argv)
 
@@ -201,6 +320,8 @@ def main(argv: Optional[List[str]] = None) -> bool:
         "softmax": sweep_softmax,
         "attention": sweep_attention,
         "paged_decode": sweep_paged_decode,
+        "paged_kv_dtype": lambda r, i: sweep_paged_kv_dtype(
+            r, i, args.kv_dtype),
         "ssd_scan": sweep_ssd_scan,
         "matmul": sweep_matmul,
     }

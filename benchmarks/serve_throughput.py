@@ -112,7 +112,8 @@ def run_lockstep(cfg, params, trace, prompts, slots, max_len):
 
 def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
                    kv_layout="dense", kv_block_size=16, kv_pool_blocks=None,
-                   prefix_cache=False, prefill_chunk_tokens=None):
+                   prefix_cache=False, prefill_chunk_tokens=None,
+                   kv_dtype="fp32"):
     from repro.serve.engine import ContinuousBatchingEngine, ContinuousConfig
 
     eng = ContinuousBatchingEngine(
@@ -121,7 +122,8 @@ def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
                          kv_layout=kv_layout, kv_block_size=kv_block_size,
                          kv_pool_blocks=kv_pool_blocks,
                          prefix_cache=prefix_cache,
-                         prefill_chunk_tokens=prefill_chunk_tokens))
+                         prefill_chunk_tokens=prefill_chunk_tokens,
+                         kv_dtype=kv_dtype))
     useful = 0
     occupancy = []  # per-tick allocated blocks (paged) for the JSON record
     outputs = {}
@@ -161,11 +163,16 @@ def run_continuous(cfg, params, trace, prompts, slots, max_len, *,
         # pallas_paged pays live pages only
         out["gather_bytes_per_token"] = st["gather_bytes_per_token"]
         out["prefix"] = st.get("prefix")
+        # quantized-layout accounting (DESIGN.md §13): amortized storage
+        # cost of one cached token, scale pages included
+        out["kv_dtype"] = st["kv_dtype"]
+        out["kv_bytes_per_token"] = st["kv_bytes_per_token"]
     return out
 
 
 def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
-         json_path: str | None = None):
+         json_path: str | None = None,
+         kv_dtypes: tuple = ("fp32", "int8", "fp8_e4m3")):
     import jax
 
     from repro.configs import get_smoke_config
@@ -255,6 +262,33 @@ def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
     assert frac >= 0.30, (
         f"prefix cache saved only {frac:.0%} of prefill tokens (need >=30%)")
 
+    # --- kv_dtype sweep: quantized page pools (DESIGN.md §13) ---
+    # the same trace served at each KV storage layout; fp32 reuses the
+    # paged run above.  The record keeps bytes/token (scale pages
+    # included) and the peak pool footprint — CI asserts the int8 row
+    # compresses to <= 0.55x fp32 from this JSON.
+    kv_sweep = {}
+    for kvd in kv_dtypes:
+        r = pg if kvd == "fp32" else run_continuous(
+            cfg, params, trace, prompts, slots, max_len,
+            kv_layout="paged", kv_block_size=kv_block_size, kv_dtype=kvd)
+        kv_sweep[kvd] = {
+            "kv_bytes_per_token": r["kv_bytes_per_token"],
+            "peak_kv_bytes": r["peak_kv_bytes"],
+            "peak_used_blocks": r["peak_used_blocks"],
+            "gather_bytes_per_token": r["gather_bytes_per_token"],
+            "makespan": r["makespan"],
+        }
+        print(f"serve_paged_kv_bytes_per_token[{kvd}],"
+              f"{r['kv_bytes_per_token']:.0f},"
+              f"peak_kv_bytes={r['peak_kv_bytes']} "
+              f"peak_blocks={r['peak_used_blocks']}")
+    if "fp32" in kv_sweep and "int8" in kv_sweep:
+        ratio = (kv_sweep["int8"]["kv_bytes_per_token"]
+                 / kv_sweep["fp32"]["kv_bytes_per_token"])
+        print(f"serve_paged_kv_compression_int8,{ratio:.3f}x,"
+              f"bytes_per_token_vs_fp32 (target <=0.55)")
+
     # disjoint trace: the cache must not cost anything when nothing is
     # shared — same arrivals as the paged baseline, prefix cache on
     dp = run_continuous(cfg, params, trace, prompts, slots, max_len,
@@ -280,6 +314,7 @@ def main(n_requests: int = 12, slots: int = 4, kv_block_size: int = 16,
             "continuous": cb,
             "paged": pg,
             "paged_token_parity": parity,
+            "kv_dtype_sweep": kv_sweep,
             "prefix": {
                 "tokens_saved": saved,
                 "hits": sp["prefix"]["hits"],
@@ -310,5 +345,13 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the full record (incl. per-tick block-pool "
                     "occupancy) as JSON")
+    ap.add_argument("--kv-dtype", default="all",
+                    choices=("fp32", "int8", "fp8_e4m3", "all"),
+                    help="KV storage layout(s) for the paged kv_dtype "
+                    "sweep (default: all three)")
     args = ap.parse_args()
-    main(args.requests, args.slots, args.kv_block_size, args.json)
+    dtypes = (("fp32", "int8", "fp8_e4m3") if args.kv_dtype == "all"
+              else ("fp32", args.kv_dtype)
+              if args.kv_dtype != "fp32" else ("fp32",))
+    main(args.requests, args.slots, args.kv_block_size, args.json,
+         kv_dtypes=dtypes)

@@ -1,0 +1,144 @@
+"""Quantized KV block storage: per-block, per-head scales (DESIGN.md §13).
+
+STAR's core trade — attention tolerates reduced-fidelity operands — applied
+to KV *storage*: cache pages hold low-bit codes (``int8`` or ``fp8_e4m3``)
+and a float32 scale per (block, kv_head) restores them on the fly.  The
+scale granularity matches the page-pool layout (``repro.serve.paged``): one
+scale row per block id, so scales share the block's lifecycle exactly —
+allocate / free / CoW-copy / prefix-share all move the scale row with its
+block, and any reader that pairs a block's codes with that block's scale is
+self-consistent by construction.
+
+Symmetric absmax quantization:
+
+* ``int8``      — ``scale = absmax / 127``, codes round-to-nearest int8;
+* ``fp8_e4m3``  — ``scale = absmax / 448``, codes cast to
+  ``float8_e4m3fn`` after clipping to ±448 (values past ±448 cast to NaN,
+  so the clip is load-bearing, not cosmetic);
+* ``fp32``      — the identity layout: no codes, no scale pages.
+
+Roundtrip error per element is bounded by ``scale / 2`` for int8 (the
+rounding grid) and by half the widest e4m3 ulp (``16 * scale``) for fp8 —
+the property suite in ``tests/test_kv_quant.py`` pins both bounds.
+
+Decode writes land one row at a time, so a block's scale is *stamped* when
+its first row is written (fresh blocks only — ring wrap-around keeps the
+existing stamp, because earlier laps' rows still decode through it) and
+later rows reuse the stamp with clipping.  A clipped row loses fidelity,
+never soundness: write and read always use the same scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KV_DTYPES = ("fp32", "int8", "fp8_e4m3")
+
+# Largest representable magnitude of each code grid: int8 keeps the
+# symmetric [-127, 127] range (no -128: absmax maps to ±qmax exactly);
+# e4m3fn saturates at 448 and casts anything beyond to NaN.
+_QMAX = {"int8": 127.0, "fp8_e4m3": 448.0}
+
+# Scale floor: an all-zero block would stamp scale 0 and turn the decode
+# divide into 0/0.  The floor keeps the divide finite; zero rows still
+# encode and decode to exact zeros.
+_EPS = 1e-8
+
+_STORAGE = {
+    "int8": jnp.int8,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+}
+
+
+def validate_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(
+            f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+        )
+    return kv_dtype
+
+
+def storage_dtype(kv_dtype: str) -> jnp.dtype:
+    """The cache-leaf dtype codes are stored in (fp32 has no code grid)."""
+    validate_kv_dtype(kv_dtype)
+    if kv_dtype == "fp32":
+        raise ValueError("fp32 KV pages store values directly, not codes")
+    return jnp.dtype(_STORAGE[kv_dtype])
+
+
+def dtype_of(dtype) -> str:
+    """Map a cache-leaf dtype back to its ``kv_dtype`` name.
+
+    Any float wider than a code grid reads as ``"fp32"`` — the identity
+    layout — so callers can derive the quantization mode from the pool
+    leaves alone (the cache pytree is the source of truth, not a flag).
+    """
+    dt = jnp.dtype(dtype)
+    for name, stored in _STORAGE.items():
+        if dt == jnp.dtype(stored):
+            return name
+    return "fp32"
+
+
+def qmax(kv_dtype: str) -> float:
+    validate_kv_dtype(kv_dtype)
+    return _QMAX[kv_dtype]
+
+
+def scale_of(absmax: jax.Array, kv_dtype: str) -> jax.Array:
+    """Symmetric scale for a given absolute maximum (floored, float32)."""
+    return jnp.maximum(absmax.astype(jnp.float32), _EPS) / _QMAX[kv_dtype]
+
+
+def encode(x: jax.Array, scale: jax.Array, kv_dtype: str) -> jax.Array:
+    """Quantize ``x`` onto the code grid using ``scale`` (broadcast).
+
+    Values outside the scale's range clip to the grid edge — the stale-
+    stamp decode path relies on this (fidelity loss, never NaN/overflow).
+    """
+    y = x.astype(jnp.float32) / scale
+    if kv_dtype == "int8":
+        return jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    if kv_dtype == "fp8_e4m3":
+        # Round onto the e4m3 grid in float32 *before* the cast: neither
+        # XLA-CPU nor ml_dtypes round-to-nearest on this conversion (both
+        # can be a full ulp off), which would double the roundtrip bound
+        # the property suite pins.  Casting an exactly-representable value
+        # is exact, so compute that value ourselves: ulp = 2^(e-3) with
+        # e = floor(log2|y|) clipped to the normal/subnormal exponent
+        # range, round-to-nearest-even on that grid, then saturate at
+        # ±448 (|y| > 448 casts to NaN in e4m3fn, so the clip is
+        # load-bearing).
+        mag = jnp.maximum(jnp.abs(y), 2.0**-9)
+        exp = jnp.clip(jnp.floor(jnp.log2(mag)), -6.0, 8.0)
+        ulp = jnp.exp2(exp - 3.0)
+        q = jnp.round(y / ulp) * ulp
+        return jnp.clip(q, -448.0, 448.0).astype(jnp.float8_e4m3fn)
+    raise ValueError(f"no code grid for kv_dtype {kv_dtype!r}")
+
+
+def decode(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Restore codes to float32 — the single dequant expression every
+    reader (kernel, gather oracle, prefix-cache staging) must share so the
+    operands they build are bit-identical."""
+    return codes.astype(jnp.float32) * scale
+
+
+def quantize_blocks(x: jax.Array, kv_dtype: str):
+    """Quantize whole blocks: ``[..., bs, H, D] -> (codes, scale[..., H])``.
+
+    One scale per (block, head): the absmax reduces over the block's rows
+    and the head dim, leaving the head axis — the granularity the paged
+    decode kernel reads back as a per-grid-step scalar.
+    """
+    validate_kv_dtype(kv_dtype)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))
+    scale = scale_of(absmax, kv_dtype)
+    codes = encode(x, scale[..., None, :, None], kv_dtype)
+    return codes, scale
+
+
+def row_scale(x: jax.Array, kv_dtype: str) -> jax.Array:
+    """Scale a single token row ``[..., H, D]`` would stamp: ``[..., H]``."""
+    return scale_of(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), kv_dtype)

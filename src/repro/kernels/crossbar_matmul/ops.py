@@ -4,6 +4,11 @@ Kept so pre-dispatch call sites keep working unchanged; it folds the old
 kwargs into a spec (``impl="hwmodel"`` — the crossbar behavioural model)
 and dispatches through the registry.  ``interpret=None`` now means
 "platform default".
+
+Scheduled for removal: no in-repo caller imports this shim any more
+(pinned by ``tests/test_kv_quant.py::test_no_in_repo_shim_importers``);
+it exists solely for out-of-tree call sites and will be deleted in a
+future PR.  New code must go through ``repro.ops`` directly.
 """
 
 from __future__ import annotations

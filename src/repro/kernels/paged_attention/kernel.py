@@ -57,19 +57,22 @@ from repro.core.fixedpoint import GRID_SENTINEL, FixedPointFormat
 def _kernel(
     tables_ref,  # int32 [S, W] scalar-prefetch block tables
     valid_ref,  # int32 [S] ragged valid prefix per slot
-    q_ref,  # (1, 1, group, D)
-    k_ref,  # (1, bs, 1, D) — the one page this step consumes
-    v_ref,  # (1, bs, 1, D)
-    o_ref,  # (1, 1, group, D)
-    m_scr,  # (group,) int32 (star) / f32 (exact)
-    l_scr,  # (group,) f32
-    acc_scr,  # (group, D) f32
-    *,
+    *refs,  # quantized: (ks, vs) scale pages lead; then q/k/v/o + scratch
     fmt: Optional[FixedPointFormat],
     bs: int,
     sm_scale: float,
+    quantized: bool,
 ):
+    # Operand order past the two index operands:
+    #   quantized: ks_ref [N, Hkv], vs_ref [N, Hkv]  (scalar prefetch 3/4)
+    #   always:    q_ref (1,1,group,D), k_ref (1,bs,1,D), v_ref (1,bs,1,D),
+    #              o_ref (1,1,group,D), m/l/acc scratch
+    if quantized:
+        ks_ref, vs_ref = refs[0], refs[1]
+        refs = refs[2:]
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
     s = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)
     nw = pl.num_programs(2)
     star = fmt is not None
@@ -92,6 +95,16 @@ def _kernel(
         q = q_ref[0, 0].astype(jnp.float32)  # (group, D)
         k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, D)
         v = v_ref[0, :, 0]
+        if quantized:
+            # In-kernel dequant (DESIGN.md §13): recompute the clamped page
+            # id the index map used for this step's DMA and restore the
+            # page's codes through its own (block, head) scale — the same
+            # codes * scale expression the gather oracle evaluates, one
+            # scalar per grid step.
+            last = jnp.maximum((kv_valid + bs - 1) // bs - 1, 0)
+            page = tables_ref[s, jnp.minimum(j, last)]
+            k = k * ks_ref[page, h]
+            v = v.astype(jnp.float32) * vs_ref[page, h]
         sc = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * sm_scale  # (group, bs)
@@ -151,11 +164,23 @@ def paged_flash_attention(
     fmt: Optional[FixedPointFormat],  # None -> exact online softmax
     sm_scale: Optional[float] = None,
     interpret: bool = True,
+    k_scale: Optional[jax.Array] = None,  # [N, Hkv] f32 dequant scales
+    v_scale: Optional[jax.Array] = None,  # [N, Hkv] f32
 ) -> jax.Array:
-    """Gather-free paged decode attention.  Returns ``[S, Hq, D]``."""
+    """Gather-free paged decode attention.  Returns ``[S, Hq, D]``.
+
+    With ``k_scale``/``v_scale`` the pages hold quantized codes
+    (``core.kvquant`` — int8 or fp8_e4m3): the scale pages ride the
+    scalar-prefetch path next to the block tables and each grid step
+    dequantizes its one page in VMEM, so the ``[S, W*bs, Hkv, D]``
+    gathered operand never exists at *any* precision (DESIGN.md §13).
+    """
     s, hq, d = q.shape
     n, bs, hkv, _ = k_pages.shape
     assert hq % hkv == 0, "GQA needs Hq % Hkv == 0"
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    quantized = k_scale is not None
     group = hq // hkv
     w = block_tables.shape[1]
     sm_scale = (d ** -0.5) if sm_scale is None else sm_scale
@@ -166,20 +191,21 @@ def paged_flash_attention(
     tables = block_tables.astype(jnp.int32)
     valid = kv_valid.astype(jnp.int32)
 
-    def q_map(si, hi, ji, tables, valid):
-        del ji, tables, valid
+    def q_map(si, hi, ji, tables, valid, *scales):
+        del ji, tables, valid, scales
         return (si, hi, 0, 0)
 
-    def kv_map(si, hi, ji, tables, valid):
+    def kv_map(si, hi, ji, tables, valid, *scales):
         # Clamp table lookups past the valid prefix to the slot's last
         # live page: consecutive masked steps then request the *same*
         # block, and the pipeline elides the DMA.  An all-free slot
         # (valid == 0) pins to table column 0 — the scratch page.
+        del scales
         last = jnp.maximum((valid[si] + bs - 1) // bs - 1, 0)
         return (tables[si, jnp.minimum(ji, last)], 0, hi, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(s, hkv, w),
         in_specs=[
             pl.BlockSpec((1, 1, group, d), q_map),
@@ -193,10 +219,20 @@ def paged_flash_attention(
             pltpu.VMEM((group, d), jnp.float32),
         ],
     )
-    out = pl.pallas_call(
-        functools.partial(_kernel, fmt=fmt, bs=bs, sm_scale=sm_scale),
+    call = pl.pallas_call(
+        functools.partial(
+            _kernel, fmt=fmt, bs=bs, sm_scale=sm_scale, quantized=quantized
+        ),
         out_shape=jax.ShapeDtypeStruct((s, hkv, group, d), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(tables, valid, qg, k_pages, v_pages)
+    )
+    if quantized:
+        out = call(
+            tables, valid,
+            k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+            qg, k_pages, v_pages,
+        )
+    else:
+        out = call(tables, valid, qg, k_pages, v_pages)
     return out.reshape(s, hq, d)

@@ -2,6 +2,11 @@
 
 Kept so pre-dispatch call sites keep working unchanged.  ``interpret=None``
 now means "platform default".
+
+Scheduled for removal: no in-repo caller imports this shim any more
+(pinned by ``tests/test_kv_quant.py::test_no_in_repo_shim_importers``);
+it exists solely for out-of-tree call sites and will be deleted in a
+future PR.  New code must go through ``repro.ops`` directly.
 """
 
 from __future__ import annotations

@@ -111,6 +111,7 @@ def run_continuous(args, cfg, params) -> int:
                          kv_layout=args.kv_layout,
                          kv_block_size=args.kv_block_size,
                          kv_pool_blocks=args.kv_pool_blocks,
+                         kv_dtype=args.kv_dtype,
                          prefix_cache=args.prefix_cache,
                          prefill_chunk_tokens=args.prefill_chunk_tokens),
     )
@@ -188,6 +189,13 @@ def main() -> int:
         "max_len clamped to the arch's sliding window)",
     )
     ap.add_argument(
+        "--kv-dtype", choices=("fp32", "int8", "fp8_e4m3"), default="fp32",
+        help="paged KV: page-pool storage layout — int8/fp8_e4m3 store "
+        "quantized codes plus per-(block, head) scale pages and decode "
+        "dequantizes in-kernel (DESIGN.md §13); requires --kv-layout paged "
+        "(or --attn-impl paged/pallas_paged)",
+    )
+    ap.add_argument(
         "--prefix-cache", action="store_true",
         help="continuous+paged: share KV blocks across requests with a "
         "common prompt prefix (radix trie over token-id block chunks; "
@@ -234,9 +242,16 @@ def main() -> int:
         # the gather-free paged decode kernel (DESIGN.md §11): flip the
         # serve stack to the block-pool cache and retarget the paged op;
         # dense invocations (prefill, lockstep) keep the marker's xla math
-        ops.validate(cfg.paged_attention_spec, impl="pallas_paged")
+        ops.validate(
+            cfg.paged_attention_spec, impl="pallas_paged",
+            kv_dtype=args.kv_dtype,
+        )
         overrides["paged_attention"] = "pallas_paged"
         attn_impl = "paged"
+    elif args.kv_dtype != "fp32":
+        # quantized pages: fail at config time if the resolved paged
+        # backend cannot dequantize this layout (DESIGN.md §13)
+        ops.validate(cfg.paged_attention_spec, kv_dtype=args.kv_dtype)
     # fail fast on a spec the registry cannot serve, before any lowering
     ops.validate(cfg.attention_spec, impl=attn_impl or cfg.attention_spec.impl)
     ops.validate(cfg.softmax_spec, impl=args.softmax_impl or cfg.softmax_spec.impl)

@@ -14,6 +14,7 @@ import dataclasses
 
 from repro import ops
 from repro.configs.base import ModelConfig
+from repro.core import kvquant
 from repro.distributed.sharding import with_logical_constraint as wlc
 from repro.models.param import ParamSpec
 
@@ -271,14 +272,58 @@ def attention_block(
         # clip keeps the gather in range, their writes land in scratch
         col = jnp.clip(idx // bs, 0, tables.shape[1] - 1)
         blk = jnp.take_along_axis(tables, col[:, None], axis=1)[:, 0]
-        ck = cache["k"].at[blk, idx % bs].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[blk, idx % bs].set(v[:, 0].astype(cache["v"].dtype))
+        row = idx % bs
         new_len = cache["len"] + 1
-        new_cache = {"k": ck, "v": cv, "len": new_len}
+        kv_dtype = kvquant.dtype_of(cache["k"].dtype)
+        if kv_dtype != "fp32":
+            # Quantized pool (DESIGN.md §13): scatter *codes*, and stamp
+            # the block's scale row only on the block's first write — later
+            # rows reuse the stamp (clipped encode), so a block's codes
+            # always decode through the scale they were written with.  On a
+            # ring's second lap (len >= cache_t) the previous lap's rows
+            # still decode through the existing stamp, so wrap never
+            # restamps.
+            krow = k[:, 0].astype(jnp.float32)  # [S, Hkv, D]
+            vrow = v[:, 0].astype(jnp.float32)
+            fresh = row == 0
+            if ring:
+                fresh = fresh & (cache["len"] < cache_t)
+            k_sc = jnp.where(
+                fresh[:, None],
+                kvquant.row_scale(krow, kv_dtype),
+                cache["k_scale"][blk],
+            )
+            v_sc = jnp.where(
+                fresh[:, None],
+                kvquant.row_scale(vrow, kv_dtype),
+                cache["v_scale"][blk],
+            )
+            ck = cache["k"].at[blk, row].set(
+                kvquant.encode(krow, k_sc[..., None], kv_dtype)
+            )
+            cv = cache["v"].at[blk, row].set(
+                kvquant.encode(vrow, v_sc[..., None], kv_dtype)
+            )
+            ks_pages = cache["k_scale"].at[blk].set(k_sc)
+            vs_pages = cache["v_scale"].at[blk].set(v_sc)
+            new_cache = {
+                "k": ck, "v": cv,
+                "k_scale": ks_pages, "v_scale": vs_pages,
+                "len": new_len,
+            }
+            kv_scales = (ks_pages, vs_pages)
+        else:
+            ck = cache["k"].at[blk, row].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[blk, row].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv, "len": new_len}
+            kv_scales = None
         kvl = jnp.minimum(new_len, cache_t) if ring else new_len
-        spec = dataclasses.replace(cfg.paged_attention_spec, block_size=bs)
+        spec = dataclasses.replace(
+            cfg.paged_attention_spec, block_size=bs, kv_dtype=kv_dtype
+        )
         ctx = ops.paged_attention(
             q, ck, cv, tables, spec, kv_valid_len=kvl, kv_len=cache_t,
+            kv_scales=kv_scales,
         )
         return ctx.reshape(b, tq, -1), new_cache, (k, v)
     if cache is not None:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import kvquant
 from repro.distributed.sharding import with_logical_constraint as wlc
 from repro.models import layers as L
 from repro.models.param import ParamSpec
@@ -305,17 +306,36 @@ class DecoderLM:
     # token-identical to the dense pool by construction.
 
     def init_paged_cache(
-        self, num_blocks: int, block_size: int, num_slots: int
+        self, num_blocks: int, block_size: int, num_slots: int,
+        kv_dtype: str = "fp32",
     ) -> Params:
-        """Zeroed page pool: KV [L, N, bs, Hkv, D], per-slot len/pos."""
+        """Zeroed page pool: KV [L, N, bs, Hkv, D], per-slot len/pos.
+
+        ``kv_dtype != "fp32"`` stores quantized codes instead of values and
+        adds ``k_scale``/``v_scale`` leaves — one float32 scale per
+        (layer, block, kv_head) — initialized to ones so the scratch block
+        and never-written pages decode to exact zeros (DESIGN.md §13).
+        fp32 pools carry *no* scale leaves: ``"k_scale" in cache["layers"]``
+        is the quantized-layout marker everywhere downstream.
+        """
         cfg = self.cfg
+        kvquant.validate_kv_dtype(kv_dtype)
         kv = (
             cfg.num_layers, num_blocks, block_size,
             cfg.num_kv_heads, cfg.resolved_head_dim,
         )
-        dt = jnp.dtype(cfg.compute_dtype)
+        dt = (
+            jnp.dtype(cfg.compute_dtype)
+            if kv_dtype == "fp32"
+            else kvquant.storage_dtype(kv_dtype)
+        )
+        leaves = {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)}
+        if kv_dtype != "fp32":
+            sc = (cfg.num_layers, num_blocks, cfg.num_kv_heads)
+            leaves["k_scale"] = jnp.ones(sc, jnp.float32)
+            leaves["v_scale"] = jnp.ones(sc, jnp.float32)
         return {
-            "layers": {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)},
+            "layers": leaves,
             "len": jnp.zeros((num_slots,), jnp.int32),
             "pos": jnp.zeros((num_slots,), jnp.int32),
         }
@@ -350,13 +370,28 @@ class DecoderLM:
             lyr, _, h, d = a.shape
             return a.reshape(lyr, w, bs, h, d)
 
-        return {
-            "layers": {
+        kv_dtype = kvquant.dtype_of(pk.dtype)
+        if kv_dtype != "fp32":
+            # Prefill-time quantization: whole blocks at once, so each
+            # block's scale is the true absmax over its rows — no clipping
+            # on this path (DESIGN.md §13).
+            kc, ks = kvquant.quantize_blocks(blocks(k1), kv_dtype)
+            vc, vs = kvquant.quantize_blocks(blocks(cache["layers"]["v"]), kv_dtype)
+            leaves = {
+                "k": pk.at[:, table].set(kc),
+                "v": pool["layers"]["v"].at[:, table].set(vc),
+                "k_scale": pool["layers"]["k_scale"].at[:, table].set(ks),
+                "v_scale": pool["layers"]["v_scale"].at[:, table].set(vs),
+            }
+        else:
+            leaves = {
                 "k": pk.at[:, table].set(blocks(k1).astype(pk.dtype)),
                 "v": pool["layers"]["v"].at[:, table].set(
                     blocks(cache["layers"]["v"]).astype(pk.dtype)
                 ),
-            },
+            }
+        return {
+            "layers": leaves,
             "len": pool["len"].at[slot].set(cache["len"].astype(jnp.int32)),
             "pos": pool["pos"].at[slot].set(cache["pos"].astype(jnp.int32)),
         }
@@ -365,11 +400,18 @@ class DecoderLM:
         """Copy one KV block (all layers) — the device half of the
         allocator's copy-on-fork hook (``BlockPool.ensure_writable``)."""
         pk, pv = pool["layers"]["k"], pool["layers"]["v"]
+        leaves = {
+            "k": pk.at[:, dst].set(pk[:, src]),
+            "v": pv.at[:, dst].set(pv[:, src]),
+        }
+        for name in ("k_scale", "v_scale"):
+            # quantized layout: the scale row shares its block's lifecycle,
+            # so a CoW copy moves it too (DESIGN.md §13)
+            if name in pool["layers"]:
+                sp = pool["layers"][name]
+                leaves[name] = sp.at[:, dst].set(sp[:, src])
         return {
-            "layers": {
-                "k": pk.at[:, dst].set(pk[:, src]),
-                "v": pv.at[:, dst].set(pv[:, src]),
-            },
+            "layers": leaves,
             "len": pool["len"],
             "pos": pool["pos"],
         }
@@ -397,13 +439,15 @@ class DecoderLM:
         if cfg.mrope_sections:
             pos = jnp.stack([pos, pos, pos], axis=-1)
 
+        kv_leaves = tuple(cache["layers"])  # += k/v_scale when quantized
+
         def body(carry, xs):
             out, new_c, _, _ = self._block(
                 xs["p"], carry, positions=pos,
                 cache={**xs["c"], "len": cache["len"], "tables": block_tables},
                 kv_valid_len=None, paged_cache_t=cache_t,
             )
-            return out, {"k": new_c["k"], "v": new_c["v"]}
+            return out, {name: new_c[name] for name in kv_leaves}
 
         h, new_layer_caches = L.scan_blocks(
             body, x, {"p": params["blocks"], "c": cache["layers"]}
@@ -411,7 +455,7 @@ class DecoderLM:
         h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
         logits = L.unembed(params["unembed"], h, cfg, params["embed"])
         new_cache = {
-            "layers": {"k": new_layer_caches["k"], "v": new_layer_caches["v"]},
+            "layers": {name: new_layer_caches[name] for name in kv_leaves},
             "len": cache["len"] + 1,
             "pos": cache.get("pos", cache["len"]) + 1,
         }
@@ -549,16 +593,26 @@ class DecoderLM:
         if rows != len(blocks) * bs:
             raise ValueError(f"prefix rows {rows} != {len(blocks)} blocks x {bs}")
         tab = jnp.asarray(list(blocks), jnp.int32)
+        quantized = "k_scale" in pool["layers"]
+        dt = jnp.dtype(self.cfg.compute_dtype)
 
-        def gather(a):  # [L, N, bs, H, D] -> [L, 1, capacity, H, D]
+        def gather(a, scale):  # [L, N, bs, H, D] -> [L, 1, capacity, H, D]
             g = a[:, tab]
+            if scale is not None:
+                # dense staging holds *values*: restore the cached prefix
+                # blocks through their own scale rows (same codes * scale
+                # expression the decode kernel evaluates — DESIGN.md §13)
+                g = kvquant.decode(g, scale[:, tab][:, :, None, :, None]).astype(dt)
             lyr, w, _, hh, dd = g.shape
             g = g.reshape(lyr, 1, w * bs, hh, dd)
             return jnp.pad(g, [(0, 0), (0, 0), (0, capacity - w * bs), (0, 0), (0, 0)])
 
         rows32 = jnp.asarray(rows, jnp.int32)
         return {
-            "layers": {"k": gather(pk), "v": gather(pv)},
+            "layers": {
+                "k": gather(pk, pool["layers"]["k_scale"] if quantized else None),
+                "v": gather(pv, pool["layers"]["v_scale"] if quantized else None),
+            },
             "len": rows32,
             "pos": rows32,
         }

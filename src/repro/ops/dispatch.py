@@ -132,6 +132,7 @@ def paged_attention(
     kv_valid_len: jax.Array,  # [S] ragged valid prefix per sequence
     kv_len: Optional[int] = None,  # logical gathered length (<= W * block_size)
     scale: Optional[float] = None,
+    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # ([N,H], [N,H])
     **overrides: Any,
 ) -> jax.Array:
     """Paged-KV decode attention: gather each sequence's blocks through its
@@ -141,10 +142,23 @@ def paged_attention(
     the block grid overshoots it (``W * block_size`` rows gathered, only
     ``kv_len`` meaningful) so the operands — and hence the numerics — match
     the dense per-slot cache exactly.
+
+    ``kv_scales`` carries the per-(block, head) dequant scale pages
+    ``(k_scale, v_scale)`` when the pool stores quantized codes
+    (``spec.kv_dtype != "fp32"`` — DESIGN.md §13); required then,
+    forbidden otherwise, so a layout/spec mismatch fails loudly here
+    instead of decoding garbage.
     """
     backend, spec = resolve(
         spec if spec is not None else DEFAULT_PAGED_ATTENTION, **overrides
     )
+    if (spec.kv_dtype != "fp32") != (kv_scales is not None):
+        raise OpDispatchError(
+            f"kv_dtype={spec.kv_dtype!r} but kv_scales "
+            f"{'missing' if kv_scales is None else 'supplied'}: quantized "
+            "page pools must pass their (k_scale, v_scale) pages and fp32 "
+            "pools must not (DESIGN.md §13)"
+        )
     return backend.fn(
         spec,
         q,
@@ -154,6 +168,7 @@ def paged_attention(
         kv_valid_len=kv_valid_len,
         kv_len=kv_len,
         scale=scale,
+        kv_scales=kv_scales,
     )
 
 

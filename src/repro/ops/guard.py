@@ -92,6 +92,25 @@ class GuardConfig:
             raise ValueError(f"tolerance must be > 0, got {self.tolerance}")
 
 
+def clean_spec(spec, impl: str):
+    """Degradation-free twin of ``spec`` on backend ``impl``.
+
+    The guard's fallback must not re-trip on the very degradation it is
+    escaping, so every accuracy-reducing field the spec family carries is
+    stripped by introspection: the fault model (``fault=None``) and
+    quantized KV storage (``kv_dtype="fp32"``).  Fields a given spec type
+    lacks are simply skipped, so one helper serves softmax, matmul, and
+    any future guarded op.
+    """
+    updates: dict = {"impl": impl}
+    names = {f.name for f in dataclasses.fields(spec)}
+    if "fault" in names:
+        updates["fault"] = None
+    if "kv_dtype" in names:
+        updates["kv_dtype"] = "fp32"
+    return dataclasses.replace(spec, **updates)
+
+
 class AccuracyGuard:
     """Stateful guard: counters + trip latch.  Reuse one instance across
     calls — a fresh guard per call cannot accumulate stats or latch."""
@@ -168,7 +187,7 @@ class AccuracyGuard:
         self._require_concrete(x, "softmax")
         cfg = self.config
         fb = self._fallback_impl("softmax")
-        clean = dataclasses.replace(spec, fault=None, impl=fb)
+        clean = clean_spec(spec, fb)
         clean_fn = registry.get("softmax", fb).fn
         if self.tripped and cfg.latch:
             self.calls += 1
@@ -202,7 +221,7 @@ class AccuracyGuard:
         self._require_concrete(x, "matmul")
         cfg = self.config
         fb = self._fallback_impl("matmul")
-        clean = dataclasses.replace(spec, fault=None, impl=fb)
+        clean = clean_spec(spec, fb)
         clean_fn = registry.get("matmul", fb).fn
         if self.tripped and cfg.latch:
             self.calls += 1

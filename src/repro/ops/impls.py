@@ -27,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvquant
 from repro.core.attention import (
     NEG_INF,
     SoftmaxConfig,
@@ -297,6 +298,7 @@ def _gather_pages(
     v_pages: jax.Array,
     block_tables: jax.Array,  # [S, W] int32
     kv_len: Optional[int],
+    kv_scales: Optional[tuple] = None,  # (k_scale, v_scale), each [N, Hkv]
 ) -> tuple:
     """Concatenate each sequence's blocks: -> dense [S, kv_len, Hkv, D].
 
@@ -305,11 +307,24 @@ def _gather_pages(
     reproduces the dense per-slot cache row exactly; rows past ``kv_len``
     (block-grid overshoot) are dropped, rows past the caller's
     ``kv_valid_len`` are masked downstream.
+
+    With ``kv_scales`` the pages hold quantized codes: each gathered block
+    is dequantized through its own (block, head) scale — the same
+    ``codes.astype(f32) * scale`` expression the paged kernel evaluates in
+    place, so this gathered view is the kernel's dequant *oracle*
+    (DESIGN.md §13).
     """
     s, w = block_tables.shape
     n, bs, hkv, d = k_pages.shape
-    kd = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
-    vd = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    flat = block_tables.reshape(-1)
+    kd = jnp.take(k_pages, flat, axis=0)
+    vd = jnp.take(v_pages, flat, axis=0)
+    if kv_scales is not None:
+        k_scale, v_scale = kv_scales
+        ks = jnp.take(k_scale, flat, axis=0)[:, None, :, None]  # [S*W,1,Hkv,1]
+        vs = jnp.take(v_scale, flat, axis=0)[:, None, :, None]
+        kd = kvquant.decode(kd, ks)
+        vd = kvquant.decode(vd, vs)
     kd = kd.reshape(s, w * bs, hkv, d)
     vd = vd.reshape(s, w * bs, hkv, d)
     if kv_len is not None and kv_len < w * bs:
@@ -350,8 +365,9 @@ def _make_paged_backend(impl: str, dense_fn):
         kv_valid_len: jax.Array,
         kv_len: Optional[int] = None,
         scale: Optional[float] = None,
+        kv_scales: Optional[tuple] = None,
     ) -> jax.Array:
-        kd, vd = _gather_pages(k_pages, v_pages, block_tables, kv_len)
+        kd, vd = _gather_pages(k_pages, v_pages, block_tables, kv_len, kv_scales)
         return dense_fn(
             _paged_dense_spec(spec, impl),
             q,
@@ -368,22 +384,30 @@ register(
     "paged_attention",
     "reference",
     _make_paged_backend("reference", _attention_reference),
+    capabilities={"kv_dtype": kvquant.KV_DTYPES},
     description="block-table gather + whole-operand ragged decode "
-    "(core.attention)",
+    "(core.attention); quantized pools dequantize at gather time — the "
+    "paged kernel's dequant oracle",
 )
 register(
     "paged_attention",
     "xla",
     _make_paged_backend("xla", _attention_xla),
+    capabilities={"kv_dtype": kvquant.KV_DTYPES},
     description="block-table gather via jnp.take + the online-blocked "
-    "dense pipeline over ragged valid lengths",
+    "dense pipeline over ragged valid lengths (dequant oracle for "
+    "quantized pools)",
 )
 register(
     "paged_attention",
     "pallas",
     _make_paged_backend("pallas", _attention_pallas),
     # online-rescale kernel: no per-cell fault path (see DESIGN.md §9)
-    capabilities={"softmax.kind": ("star", "exact"), "softmax.fault": (None,)},
+    capabilities={
+        "softmax.kind": ("star", "exact"),
+        "softmax.fault": (None,),
+        "kv_dtype": kvquant.KV_DTYPES,
+    },
     description="block-table gather + fused flash_star kernel with the "
     "ragged-length info vector (kernels.flash_star)",
 )
@@ -399,6 +423,7 @@ def _paged_pallas_paged(
     kv_valid_len: jax.Array,
     kv_len: Optional[int] = None,
     scale: Optional[float] = None,
+    kv_scales: Optional[tuple] = None,
 ) -> jax.Array:
     """Gather-free decode: the kernel walks the block table in place."""
     if q.shape[1] != 1:
@@ -411,6 +436,7 @@ def _paged_pallas_paged(
     if kv_len is not None:
         # ring caches: the live window is the valid prefix of the buffer
         valid = jnp.minimum(valid, jnp.int32(kv_len))
+    k_scale, v_scale = kv_scales if kv_scales is not None else (None, None)
     out = paged_flash_attention(
         q[:, 0],
         k_pages,
@@ -420,6 +446,8 @@ def _paged_pallas_paged(
         fmt=spec.softmax.fmt,  # None for the exact kind
         sm_scale=scale,
         interpret=spec.interpret,
+        k_scale=k_scale,
+        v_scale=v_scale,
     )
     return out[:, None]
 
@@ -429,10 +457,15 @@ register(
     "pallas_paged",
     _paged_pallas_paged,
     # same fused-kernel envelope as flash_star: no per-cell fault path
-    capabilities={"softmax.kind": ("star", "exact"), "softmax.fault": (None,)},
+    capabilities={
+        "softmax.kind": ("star", "exact"),
+        "softmax.fault": (None,),
+        "kv_dtype": kvquant.KV_DTYPES,
+    },
     description="gather-free scalar-prefetch decode kernel: the grid "
     "walks (slot, kv_head, kv_block) and DMA-fetches only table-named "
-    "pages (kernels.paged_attention)",
+    "pages; quantized pools dequantize in-kernel with the scale pages "
+    "riding scalar prefetch (kernels.paged_attention)",
 )
 
 
@@ -445,6 +478,7 @@ def paged_gather_bytes(
     num_kv_heads: int,
     head_dim: int,
     dtype_bytes: int = 4,
+    scale_bytes_per_block: int = 0,
 ) -> int:
     """Counted K+V bytes one paged decode step reads from the page pool.
 
@@ -456,14 +490,18 @@ def paged_gather_bytes(
     is the interpret-normalized traffic model behind
     ``gather_bytes_per_token`` in ``kv_stats``/benchmarks — a counted
     quantity, not a measurement.
+
+    ``dtype_bytes`` is the page-pool leaf itemsize (1 for int8/fp8 codes);
+    ``scale_bytes_per_block`` adds the K+V scale-page bytes a quantized
+    layout reads per touched block (0 for fp32 — DESIGN.md §13).
     """
     row_bytes = 2 * num_kv_heads * head_dim * dtype_bytes  # K and V
     lens = [int(x) for x in live_lens]
     if impl == "pallas_paged":
-        rows = sum(max(-(-live // block_size), 1) * block_size for live in lens)
+        blocks = sum(max(-(-live // block_size), 1) for live in lens)
     else:
-        rows = len(lens) * table_width * block_size
-    return rows * row_bytes
+        blocks = len(lens) * table_width
+    return blocks * (block_size * row_bytes + scale_bytes_per_block)
 
 
 # ---------------------------------------------------------------------------

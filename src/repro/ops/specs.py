@@ -19,6 +19,7 @@ import math
 from typing import Any, Dict, Optional, Union
 
 from repro.core.fixedpoint import DEFAULT_FORMAT, FixedPointFormat
+from repro.core.kvquant import KV_DTYPES
 from repro.core.precision import policy_for
 from repro.hwmodel.faults import FaultModel
 from repro.kernels.crossbar_matmul.ref import DEFAULT_SPEC, CrossbarSpec
@@ -186,6 +187,13 @@ class PagedAttentionSpec:
     ``block_size`` is the declared tokens-per-block default; backends
     trust the runtime page shape, the field exists so the spec fully
     records the configuration (benchmark emission, jit cache keys).
+
+    ``kv_dtype`` declares the page-pool storage layout (DESIGN.md §13):
+    ``"fp32"`` stores values directly; ``"int8"`` / ``"fp8_e4m3"`` store
+    codes plus per-(block, head) scale pages that every call must supply
+    via ``kv_scales``.  Gather backends dequantize the gathered codes (the
+    oracle the kernel is parity-tested against); ``pallas_paged``
+    dequantizes inside the kernel with the scales riding scalar prefetch.
     """
 
     impl: str = "xla"
@@ -193,6 +201,7 @@ class PagedAttentionSpec:
     block_size: int = 16  # tokens per KV block
     block_q: int = 128  # pallas: query tile
     block_k: int = 128  # pallas: KV tile
+    kv_dtype: str = "fp32"  # fp32 | int8 | fp8_e4m3 (core.kvquant)
     interpret: Optional[bool] = None
 
     op = "paged_attention"
@@ -201,6 +210,10 @@ class PagedAttentionSpec:
         for field in ("block_size", "block_q", "block_k"):
             if getattr(self, field) <= 0:
                 raise ValueError(f"{field} must be > 0, got {getattr(self, field)}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {self.kv_dtype!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -172,6 +172,11 @@ class ContinuousConfig:
     # with decode ticks instead of head-of-line-blocking the pool; None
     # keeps the monolithic admission prefill.
     prefill_chunk_tokens: Optional[int] = None
+    # Quantized KV page storage (DESIGN.md §13): "int8" / "fp8_e4m3" store
+    # codes + per-(block, head) scale pages in the page pool and the decode
+    # kernel dequantizes in-kernel.  Paged layout only — the dense per-slot
+    # pool has no block granularity to hang scales off.
+    kv_dtype: str = "fp32"  # fp32 | int8 | fp8_e4m3
     # Accuracy guard on the sampling softmax (DESIGN.md §9): sampled
     # comparison against the exact oracle, fallback to a clean backend
     # when a degraded (faulty / over-quantized) spec exceeds tolerance.
@@ -290,7 +295,8 @@ class ContinuousBatchingEngine:
             if usable is None:
                 usable = cb_cfg.num_slots * self._slot_blocks
             self.block_pool = BlockPool(
-                usable + 1, bs, metrics=self.metrics  # +1: scratch block 0
+                usable + 1, bs,  # +1: scratch block 0
+                kv_dtype=cb_cfg.kv_dtype, metrics=self.metrics,
             )
             if self._ring and self._slot_blocks > self.block_pool.usable_blocks:
                 raise ValueError(
@@ -299,7 +305,7 @@ class ContinuousBatchingEngine:
                     f"{self.block_pool.usable_blocks}; raise kv_pool_blocks"
                 )
             self.pool = self.model.init_paged_cache(
-                usable + 1, bs, cb_cfg.num_slots
+                usable + 1, bs, cb_cfg.num_slots, kv_dtype=cb_cfg.kv_dtype
             )
             self._tables = np.full(
                 (cb_cfg.num_slots, self._slot_blocks), SCRATCH_BLOCK, np.int32
@@ -327,6 +333,12 @@ class ContinuousBatchingEngine:
             self.preemptions = 0  # OOM evictions (requeued, not dropped)
             self.peak_used_blocks = 0
         else:
+            if cb_cfg.kv_dtype != "fp32":
+                raise ValueError(
+                    f"kv_dtype={cb_cfg.kv_dtype!r} requires kv_layout='paged' "
+                    "(scales are per-block; the dense per-slot pool has no "
+                    "blocks) — pass kv_layout='paged' or drop kv_dtype"
+                )
             self.block_pool = None
             self.pool = self.model.init_pool_cache(cb_cfg.num_slots, cb_cfg.max_len)
             # donate the pool everywhere it is threaded through: the tick,
@@ -852,11 +864,28 @@ class ContinuousBatchingEngine:
         self.pool = self._reset_slot(self.pool, slot.index)
 
     def kv_row_bytes(self) -> int:
-        """Bytes one KV token row costs across all layers (K + V)."""
-        pk = self.pool["layers"]["k"]
-        num_layers = pk.shape[0]
-        head_bytes = int(np.prod(pk.shape[-2:])) * pk.dtype.itemsize
-        return 2 * num_layers * head_bytes
+        """Bytes one KV token row costs across all layers (K + V).
+
+        Derived from the *actual* cache leaf dtypes — a quantized pool's
+        int8/fp8 codes count one byte per element, not the compute dtype's
+        four — so every byte figure downstream (kv_stats, benchmarks, CI's
+        compression-ratio gate) reflects what the pool really stores.
+        """
+        layers = self.pool["layers"]
+        num_layers = layers["k"].shape[0]
+        per_head = int(np.prod(layers["k"].shape[-2:]))
+        return num_layers * per_head * (
+            layers["k"].dtype.itemsize + layers["v"].dtype.itemsize
+        )
+
+    def kv_scale_bytes_per_block(self) -> int:
+        """Scale-page overhead per block across all layers (0 at fp32)."""
+        layers = self.pool["layers"]
+        if "k_scale" not in layers:
+            return 0
+        ks, vs = layers["k_scale"], layers["v_scale"]
+        num_layers, _, hkv = ks.shape
+        return num_layers * hkv * (ks.dtype.itemsize + vs.dtype.itemsize)
 
     def kv_stats(self) -> Dict[str, Any]:
         """Live KV-memory accounting (benchmarks/serve_throughput.py).
@@ -877,17 +906,24 @@ class ContinuousBatchingEngine:
                     "evicted": p.evicted if p else 0,
                     "nodes": len(p) if p else 0,
                 }
+            # a block's full footprint: its token rows plus (quantized
+            # layouts only) its per-(layer, head) scale rows
+            block_bytes = bs * row_bytes + self.kv_scale_bytes_per_block()
             return {
                 "prefix": prefix_stats,
                 "layout": "paged",
+                "kv_dtype": self.block_pool.kv_dtype,
                 "used_blocks": self.block_pool.used_blocks,
                 "free_blocks": self.block_pool.free_blocks,
                 "total_blocks": self.block_pool.usable_blocks,
-                "kv_bytes_in_use": self.block_pool.used_blocks * bs * row_bytes,
+                # amortized storage cost of one cached token, scale pages
+                # included — the benchmark/CI compression-ratio numerator
+                "kv_bytes_per_token": block_bytes / bs,
+                "kv_bytes_in_use": self.block_pool.used_blocks * block_bytes,
                 "kv_bytes_capacity": (
-                    self.block_pool.usable_blocks * bs * row_bytes
+                    self.block_pool.usable_blocks * block_bytes
                 ),
-                "peak_kv_bytes": self.peak_used_blocks * bs * row_bytes,
+                "peak_kv_bytes": self.peak_used_blocks * block_bytes,
                 "preemptions": self.preemptions,
                 "peak_used_blocks": self.peak_used_blocks,
                 # counted decode traffic (ops.paged_gather_bytes): what
@@ -902,6 +938,8 @@ class ContinuousBatchingEngine:
         rows = self.cb.num_slots * self._cache_t
         return {
             "layout": "dense",
+            "kv_dtype": "fp32",
+            "kv_bytes_per_token": float(row_bytes),
             "kv_bytes_in_use": rows * row_bytes,
             "kv_bytes_capacity": rows * row_bytes,
             "peak_kv_bytes": rows * row_bytes,
@@ -1111,6 +1149,7 @@ class ContinuousBatchingEngine:
                     or self.cfg.paged_attention_spec.impl
                 )
                 pk = self.pool["layers"]["k"]
+                quantized = "k_scale" in self.pool["layers"]
                 self._m_gather.inc(pk.shape[0] * ops.paged_gather_bytes(
                     impl,
                     table_width=self._slot_blocks,
@@ -1119,6 +1158,8 @@ class ContinuousBatchingEngine:
                     num_kv_heads=pk.shape[3],
                     head_dim=pk.shape[4],
                     dtype_bytes=pk.dtype.itemsize,
+                    # per-layer K+V scale rows a quantized read touches
+                    scale_bytes_per_block=(8 * pk.shape[3]) if quantized else 0,
                 ))
             for slot in active:
                 tok = toks[slot.index]

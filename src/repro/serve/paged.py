@@ -58,6 +58,11 @@ from repro.obs.metrics import MetricsRegistry
 
 SCRATCH_BLOCK = 0  # reserved id: free-slot / padding writes land here
 
+# Valid page-pool storage layouts — a jax-free mirror of
+# ``repro.core.kvquant.KV_DTYPES`` (this module must stay importable
+# without jax; the parity of the two tuples is pinned by the test suite).
+KV_DTYPES = ("fp32", "int8", "fp8_e4m3")
+
 
 def bucket_blocks(n: int, cap: int) -> int:
     """Round a block count up to the next power of two, clamped to ``cap``.
@@ -96,6 +101,7 @@ class BlockPool:
         num_blocks: int,
         block_size: int,
         *,
+        kv_dtype: str = "fp32",
         metrics: Optional[MetricsRegistry] = None,
     ):
         if num_blocks < 2:
@@ -105,8 +111,19 @@ class BlockPool:
             )
         if block_size <= 0:
             raise ValueError(f"block_size must be positive, got {block_size}")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+            )
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.kv_dtype = kv_dtype
+        # Host-side mirror of the device scale pages (DESIGN.md §13): a
+        # quantized pool carries one scale row per allocated block, sharing
+        # the block's lifecycle exactly — handed out with the block, retired
+        # when the block returns to the free list.  The property suite pins
+        # ``_scale_pages == set(_refcount)`` through every op sequence.
+        self._scale_pages: set = set()
         # LIFO free list: hot blocks are reused first (better locality and
         # the stale-reuse tests exercise the hardest path constantly)
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
@@ -137,6 +154,22 @@ class BlockPool:
     def usable_blocks(self) -> int:
         """Blocks a single request could ever own (scratch excluded)."""
         return self.num_blocks - 1
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype != "fp32"
+
+    def has_scale_page(self, block: int) -> bool:
+        """True when the block currently owns a live scale page (quantized
+        pools only; always False at fp32)."""
+        return block in self._scale_pages
+
+    def _page_out(self, block: int) -> None:
+        if self.kv_dtype != "fp32":
+            self._scale_pages.add(block)
+
+    def _page_retire(self, block: int) -> None:
+        self._scale_pages.discard(block)
 
     @property
     def free_blocks(self) -> int:
@@ -175,6 +208,7 @@ class BlockPool:
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
             self._refcount[b] = 1
+            self._page_out(b)
         self._tables[uid] = blocks
         self._track(allocated=n)
         return list(blocks)
@@ -190,6 +224,7 @@ class BlockPool:
             )
         b = self._free.pop()
         self._refcount[b] = 1
+        self._page_out(b)
         self._tables[uid].append(b)
         self._track(allocated=1)
         return b
@@ -204,6 +239,7 @@ class BlockPool:
             if self._refcount[b] == 0:
                 del self._refcount[b]
                 self._free.append(b)
+                self._page_retire(b)
                 freed.append(b)
         self._track(freed=len(freed))
         return freed
@@ -249,6 +285,9 @@ class BlockPool:
         dst = self._free.pop()
         self._refcount[src] -= 1
         self._refcount[dst] = 1
+        # the device-side copy_block duplicates src's codes AND its scale
+        # row into dst, so dst's page is live the moment it is handed out
+        self._page_out(dst)
         table[idx] = dst
         self._track(allocated=1)
         return src, dst
@@ -296,6 +335,7 @@ class BlockPool:
         if self._refcount[block] == 0:
             del self._refcount[block]
             self._free.append(block)
+            self._page_retire(block)
             self._track(freed=1)
             return True
         return False

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.crossbar_matmul.ops import crossbar_matmul_op
+from repro import ops
 from repro.kernels.crossbar_matmul.ref import (
     CrossbarSpec,
     crossbar_matmul_ref,
@@ -12,6 +12,14 @@ from repro.kernels.crossbar_matmul.ref import (
 )
 
 RNG = np.random.default_rng(5)
+
+
+def crossbar_matmul_op(x, w, *, spec=None, ranging="calibrated", block_m=128):
+    """Dispatch-layer call the retired ``ops.py`` shim used to wrap."""
+    kw = {"crossbar": spec} if spec is not None else {}
+    return ops.matmul(x, w, ops.MatmulSpec(
+        impl="hwmodel", ranging=ranging, block_m=block_m, **kw
+    ))
 
 
 @pytest.mark.parametrize("mkn", [(16, 128, 128), (7, 300, 190), (64, 256, 384), (1, 128, 64)])

@@ -4,11 +4,29 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import ops
 from repro.core.fixedpoint import DEFAULT_FORMAT, FORMAT_COLA
-from repro.kernels.flash_star.ops import flash_star_op
 from repro.kernels.flash_star.ref import flash_star_blocked_ref, flash_star_ref
 
 RNG = np.random.default_rng(11)
+
+
+def flash_star_op(q, k, v, *, fmt=DEFAULT_FORMAT, causal=True,
+                  sliding_window=None, q_offset=0, kv_valid_len=None,
+                  pv_int8=False, block_q=128, block_k=128):
+    """Dispatch-layer call the retired ``ops.py`` shim used to wrap
+    (``fmt=None`` selects the exact-softmax kind)."""
+    softmax = (
+        ops.SoftmaxSpec(kind="exact") if fmt is None
+        else ops.SoftmaxSpec(kind="star", precision=fmt)
+    )
+    spec = ops.AttentionSpec(
+        impl="pallas", softmax=softmax, causal=causal,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        pv_int8=pv_int8,
+    )
+    return ops.attention(q, k, v, spec, q_offset=q_offset,
+                         kv_valid_len=kv_valid_len)
 
 
 def qkv(b, tq, tk, hq, hkv, d, dtype=jnp.float32):

@@ -82,6 +82,15 @@ def check_invariants(pool: BlockPool, pins: Counter = None) -> None:
     assert all(1 <= b < pool.num_blocks for b in free)
     assert all(1 <= b < pool.num_blocks for b in live)
 
+    # scale pages share their block's lifecycle exactly (DESIGN.md §13):
+    # every allocated block of a quantized pool owns a live scale page,
+    # no freed block keeps one, and fp32 pools carry none at all
+    if pool.quantized:
+        assert pool._scale_pages == set(refcount), (
+            pool._scale_pages, set(refcount))
+    else:
+        assert not pool._scale_pages
+
 
 def drive(pool: BlockPool, opcodes) -> None:
     """Decode each opcode into one pool operation (guarded so every random
@@ -134,6 +143,14 @@ def test_pool_invariants_random_traffic(opcodes):
 def test_pool_invariants_tiny_pool(opcodes):
     # 2 usable blocks: every sequence lives at the exhaustion boundary
     drive(BlockPool(3, BLOCK_SIZE), opcodes)
+
+
+@settings(max_examples=100, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 10_000), min_size=1, max_size=80))
+def test_pool_invariants_quantized_scale_pages(opcodes):
+    # same traffic, int8 layout: every op must keep scale pages in
+    # lockstep with block refcounts (checked inside check_invariants)
+    drive(BlockPool(POOL_BLOCKS, BLOCK_SIZE, kv_dtype="int8"), opcodes)
 
 
 # -- directed edge cases the random driver cannot guarantee to hit ----------
@@ -260,6 +277,14 @@ def test_prefix_trie_invariants_random_traffic(opcodes):
 def test_prefix_trie_invariants_tiny_pool(opcodes):
     # 3 usable blocks: adoption + insert constantly at the boundary
     drive_prefix(BlockPool(4, BLOCK_SIZE), opcodes)
+
+
+@settings(max_examples=100, deadline=None)
+@given(opcodes=st.lists(st.integers(0, 10_000), min_size=1, max_size=80))
+def test_prefix_trie_invariants_quantized(opcodes):
+    # trie pins / adoption / eviction with int8 scale pages: a shared or
+    # pinned block's scale page must survive exactly as long as the block
+    drive_prefix(BlockPool(POOL_BLOCKS, BLOCK_SIZE, kv_dtype="int8"), opcodes)
 
 
 def test_trie_pin_is_never_freed_while_referenced():
